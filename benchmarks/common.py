@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall microseconds per call of a (jit'd) function."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

@@ -1,0 +1,43 @@
+"""Paper §VIII-F / Table V: sketch construction cost vs one mining pass.
+
+Claim to validate: construction is cheap relative to a single algorithm
+execution (and amortizes across algorithms)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import graph as G, sketches as S
+from repro.core import triangle_count
+
+from .common import emit, timeit
+
+
+def run(budget: float = 0.25):
+    g = G.kronecker(12, 16, seed=2)
+    words = S.bloom_words_for_budget(g.n, g.m, budget)
+    k = S.minhash_k_for_budget(g.n, g.m, budget)
+
+    builders = {
+        "bf_b1": (jax.jit(functools.partial(S.build_bloom, words=words,
+                                            num_hashes=1, seed=7))),
+        "bf_b4": (jax.jit(functools.partial(S.build_bloom, words=words,
+                                            num_hashes=4, seed=7))),
+        "kh": jax.jit(functools.partial(S.build_khash, k=k, seed=7)),
+        "1h": jax.jit(functools.partial(S.build_1hash, k=k, seed=7)),
+        "kmv": jax.jit(functools.partial(S.build_kmv, k=k, seed=7)),
+    }
+    times = {}
+    for name, fn in builders.items():
+        times[name] = timeit(fn, g, iters=3)
+
+    sk = S.build(g, "bf", budget, num_hashes=1, seed=7)
+    tc_fn = jax.jit(triangle_count)
+    t_tc = timeit(tc_fn, g, sk, iters=3)
+    for name, t in times.items():
+        emit(f"tableV_construct_{name}", t, f"vs_one_tc_pass={t / t_tc:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

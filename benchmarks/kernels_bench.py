@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks.
+
+The Pallas kernels are TPU-target; on CPU they run in interpret mode (Python
+— correctness only, no speed). The numbers that matter on this host are the
+XLA-compiled jnp reference paths, which share the exact op structure the
+TPU kernel implements (AND+popcount / k² compare). We report those, plus the
+arithmetic intensity that drives the §Perf roofline for the mining step.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from .common import emit, timeit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for e, w in [(4096, 32), (16384, 32), (16384, 128)]:
+        a = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+        b = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+        fn = jax.jit(ref.bf_intersect_pairs).lower(a, b).compile()
+        us = timeit(lambda: fn(a, b), iters=5)
+        bytes_moved = 2 * e * w * 4
+        emit(f"kern_bf_intersect_e{e}_w{w}", us,
+             f"GBps={bytes_moved / us / 1e3:.2f};ai=0.75flops/byte")
+
+    n, e, w = 8192, 65536, 32
+    bloom = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+    edges = jnp.asarray(rng.integers(0, n, size=(e, 2), dtype=np.int32))
+    fn = jax.jit(ref.bf_edge_intersect).lower(bloom, edges).compile()
+    us = timeit(lambda: fn(bloom, edges), iters=5)
+    emit(f"kern_bf_edge_gather_e{e}", us,
+         f"GBps={2 * e * w * 4 / us / 1e3:.2f}")
+
+    for e, k in [(16384, 32), (2048, 128)]:
+        a = jnp.asarray(np.sort(rng.integers(0, 10**6, size=(e, k)), axis=1).astype(np.int32))
+        b = jnp.asarray(np.sort(rng.integers(0, 10**6, size=(e, k)), axis=1).astype(np.int32))
+        fn = jax.jit(lambda x, y: ref.mh_intersect_pairs(x, y, 10**6)
+                     ).lower(a, b).compile()
+        us = timeit(lambda: fn(a, b), iters=5)
+        emit(f"kern_mh_intersect_e{e}_k{k}", us,
+             f"pairs_per_s={e / us * 1e6 / 1e6:.1f}M")
+
+
+if __name__ == "__main__":
+    run()

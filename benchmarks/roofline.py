@@ -1,0 +1,83 @@
+"""Render the dry-run roofline results (experiments/dryrun/*.json) into the
+EXPERIMENTS.md tables. `python -m benchmarks.roofline [--tag TAG]` prints
+markdown; run.py emits one summary CSV row per cell.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if (r.get("tag") or "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows, mesh: str) -> str:
+    out = ["| arch | shape | mem/dev GB | compute s | memory s | collective s | "
+           "bottleneck | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        ro = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['per_device_memory_gb']:.2f} | "
+            f"{ro['compute_s']:.3f} | {ro['memory_s']:.3f} | "
+            f"{ro['collective_s']:.3f} | {ro['bottleneck']} | "
+            f"{ro['useful_ratio']:.2f} | {ro['peak_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | compile s | HLO TFLOP/dev | coll GB/dev | "
+           "mem/dev GB | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ro = r["roofline"]
+        fits = "yes" if ro["per_device_memory_gb"] <= 16.0 else "NO"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f} | "
+            f"{ro['hlo_flops_per_device'] / 1e12:.2f} | "
+            f"{ro['link_bytes_per_device'] / 2**30:.2f} | "
+            f"{ro['per_device_memory_gb']:.2f} | {fits} |")
+    return "\n".join(out)
+
+
+def run(tag: str = ""):
+    rows = load(tag)
+    for r in rows:
+        ro = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             ro["compute_s"] * 1e6,
+             f"bottleneck={ro['bottleneck']};frac={ro['peak_fraction']:.3f};"
+             f"mem_gb={ro['per_device_memory_gb']:.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", choices=["roofline", "dryrun"], default="roofline")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.tag)
+    if args.table == "roofline":
+        print(markdown_table(rows, args.mesh))
+    else:
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see common.emit). Heavy
+roofline cells come from the dry-run artifacts (benchmarks.roofline), not
+recomputed here.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (accuracy_pairs, adaptive_bloom, algo_speedup, construction,
+                   heuristics, kernels_bench, roofline, scaling, tc_estimators)
+    suites = [
+        ("kernels", kernels_bench.run),
+        ("fig3_accuracy", accuracy_pairs.run),
+        ("fig4-6_speedup", algo_speedup.run),
+        ("table7_tc", tc_estimators.run),
+        ("heuristics", heuristics.run),
+        ("tableV_construction", construction.run),
+        ("fig8_scaling", scaling.run),
+        ("adaptive_bloom", adaptive_bloom.run),
+        ("roofline", roofline.run),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"# --- {name}", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

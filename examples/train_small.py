@@ -1,0 +1,49 @@
+"""End-to-end training driver demo: a small qwen3-family model trained for a
+few hundred steps on the synthetic Markov corpus, with checkpointing and an
+injected fault to exercise the recovery path.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 200]
+      PYTHONPATH=src python examples/train_small.py --large   # ~100M params
+
+Default is a ~25M-param config sized for this CPU container; --large uses
+the ~100M config (d_model 512, 8 layers, vocab 8192). The same driver runs
+the full pod-scale configs (launch/train.py).
+"""
+import argparse
+import tempfile
+
+from repro.distributed.fault import FaultInjector
+from repro.launch.train import TrainRunConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--large", action="store_true",
+                    help="~100M params instead of ~25M")
+    ap.add_argument("--inject-fault", action="store_true", default=True)
+    args = ap.parse_args()
+
+    d_model, layers, vocab = (512, 8, 8192) if args.large else (256, 6, 4096)
+    with tempfile.TemporaryDirectory() as ckpt:
+        run = TrainRunConfig(
+            arch="qwen3_8b", use_reduced=True,
+            d_model=d_model, layers=layers, vocab_size=vocab,
+            steps=args.steps, global_batch=args.batch, seq_len=128,
+            lr=3e-3, warmup=20,
+            ckpt_dir=ckpt, ckpt_every=50)
+        fault = FaultInjector(fail_at_steps=[args.steps // 2]) \
+            if args.inject_fault else None
+        _, hist = train(run, fault=fault)
+
+    losses = [h["loss"] for h in hist]
+    print(f"\nsteps run (incl. replay after fault): {len(hist)}")
+    print(f"loss: first={losses[0]:.4f}  "
+          f"mid={losses[len(losses) // 2]:.4f}  last={losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "training did not learn"
+    print("OK: loss decreased; fault recovery exercised" if fault else "OK")
+
+
+if __name__ == "__main__":
+    main()

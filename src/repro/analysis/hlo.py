@@ -1,0 +1,379 @@
+"""Optimized-HLO text analyzer: FLOPs, HBM-byte proxy, collective bytes.
+
+Why not `compiled.cost_analysis()`? It counts a `while` body **once**
+(verified empirically), and our models scan over layers — so every cost would
+be off by ~num_layers×. This analyzer parses `compiled.as_text()`:
+
+  * while ops carry `backend_config={"known_trip_count":{"n":"61"}}` — exact
+    trip counts, which we propagate through the call graph (body/condition/
+    calls/to_apply), so nested scans (layers × attention kv-chunks × ssm
+    chunks) each get their own multiplier.
+  * FLOPs: every `dot` instruction, 2·prod(out)·prod(lhs contracting dims),
+    looked up in a per-computation symbol table (operand types are not
+    printed inline for plain refs).
+  * HBM bytes (proxy): Σ over *top-level* instructions of control
+    computations (entry + while bodies) of operand+output buffer sizes.
+    Fusion internals never touch HBM and are skipped; this matches the
+    post-fusion buffer-traffic model TPU roofline math wants.
+  * Collectives: operand bytes of all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute (+ async -start forms), with ring-model
+    cost factors using the parsed replica-group size. SPMD shapes are
+    per-device, so these are per-device bytes on the wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    param_types: Dict[str, str]
+    instructions: List[Instruction]
+
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)(?:\.clone)?\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-_]+)\s*=\s*(\(.*?\)|[^\s(]+)\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-_]+)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                is_entry, name, params = m.group(1), m.group(2), m.group(3)
+                param_types = {}
+                for pm in re.finditer(r"([\w\.\-_]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))", params):
+                    param_types[pm.group(1)] = pm.group(2)
+                cur = Computation(name, param_types, [])
+                comps[name] = cur
+                if is_entry:
+                    entry_name = name
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, type_str, opcode, rest = im.groups()
+        # operands = refs before the closing paren of the op call (heuristic:
+        # refs in `rest` up to "), " suffix markers work because attribute
+        # values reference computations with %, which we filter by kind later)
+        call_part = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
+        operands = _OPERAND_RE.findall(call_part)
+        cur.instructions.append(Instruction(name, type_str.strip(), opcode, operands, line))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _symbol_table(comp: Computation) -> Dict[str, str]:
+    table = dict(comp.param_types)
+    for ins in comp.instructions:
+        table[ins.name] = ins.type_str
+    return table
+
+
+def _trip_count(raw: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', raw)
+    return int(m.group(1)) if m else 1
+
+
+def _called_computations(ins: Instruction) -> List[Tuple[str, str]]:
+    """(kind, computation_name) refs in attributes."""
+    out = []
+    for attr in ("body", "condition", "calls", "to_apply", "branch_computations"):
+        for m in re.finditer(attr + r"=\{?%?([\w\.\-_]+)", ins.raw):
+            out.append((attr, m.group(1)))
+        for m in re.finditer(attr + r"=\{([^}]*)\}", ins.raw):
+            for name in _OPERAND_RE.findall(m.group(1)):
+                out.append((attr, name))
+    return out
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """computation name -> execution-count multiplier from the entry."""
+    mult: Dict[str, float] = defaultdict(float)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return mult
+
+    def visit(comp: Computation, m: float, seen_stack=()):
+        if comp.name in seen_stack:
+            return
+        mult[comp.name] += m
+        for ins in comp.instructions:
+            trip = _trip_count(ins.raw) if ins.opcode == "while" else 1
+            for kind, cname in _called_computations(ins):
+                child = comps.get(cname)
+                if child is None:
+                    continue
+                child_m = m * (trip if kind in ("body", "condition") else 1)
+                visit(child, child_m, seen_stack + (comp.name,))
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(raw: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(raw)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_proxy: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_link_bytes: float = 0.0   # ring-model bytes over the slowest link
+    collective_ops: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dot_flops_by_meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    stats = HloStats()
+    entry = comps.get("__entry__")
+    control = {comps[k].name: v for k, v in mult.items() if k in comps}
+
+    # control computations: entry + while bodies/conds (top-level buffers)
+    control_names = set()
+    if entry is not None:
+        control_names.add(entry.name)
+    for key, comp in comps.items():
+        if key == "__entry__":
+            continue
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                for kind, cname in _called_computations(ins):
+                    if kind in ("body", "condition"):
+                        control_names.add(cname)
+
+    for key, comp in comps.items():
+        if key == "__entry__":
+            continue
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        table = _symbol_table(comp)
+        is_control = comp.name in control_names
+        for ins in comp.instructions:
+            # ---- FLOPs from dots (anywhere in the call graph)
+            if ins.opcode == "dot":
+                _, out_dims = _shape_dims(ins.type_str)
+                cm = _DOT_DIMS_RE.search(ins.raw)
+                contracting = [int(d) for d in cm.group(1).split(",")] if cm and cm.group(1) else []
+                lhs_type = table.get(ins.operands[0], "") if ins.operands else ""
+                _, lhs_dims = _shape_dims(lhs_type)
+                k = 1
+                for d in contracting:
+                    if d < len(lhs_dims):
+                        k *= lhs_dims[d]
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                flops = 2.0 * out_n * k
+                stats.flops += m * flops
+                meta = re.search(r'op_name="([^"]*)"', ins.raw)
+                key = meta.group(1) if meta else ins.name
+                stats.dot_flops_by_meta[key] = stats.dot_flops_by_meta.get(key, 0.0) + m * flops
+            elif ins.opcode == "while":
+                stats.while_trip_counts.append(_trip_count(ins.raw))
+
+            # ---- collective bytes
+            base_op = ins.opcode.replace("-start", "")
+            if base_op in _COLLECTIVES:
+                in_bytes = sum(_shape_bytes(table.get(op, "")) for op in ins.operands)
+                out_bytes = _shape_bytes(ins.type_str)
+                payload = max(in_bytes, out_bytes)
+                g = _group_size(ins.raw)
+                if base_op == "all-reduce":
+                    link = 2.0 * (g - 1) / g * in_bytes
+                elif base_op in ("all-gather", "reduce-scatter"):
+                    link = (g - 1) / g * payload
+                elif base_op in ("all-to-all", "ragged-all-to-all"):
+                    link = (g - 1) / g * in_bytes
+                else:  # collective-permute / broadcast
+                    link = in_bytes
+                stats.collective_bytes[base_op] = \
+                    stats.collective_bytes.get(base_op, 0.0) + m * payload
+                stats.collective_link_bytes += m * link
+                stats.collective_ops[base_op] = \
+                    stats.collective_ops.get(base_op, 0) + int(m)
+
+            # ---- HBM byte proxy (top-level control computations only)
+            if is_control and ins.opcode not in _SKIP_BYTES_OPS \
+                    and ins.opcode != "while" \
+                    and not ins.opcode.endswith("-done"):
+                stats.bytes_proxy += m * _instruction_bytes(ins, table, comps)
+    return stats
+
+
+def _instruction_bytes(ins: Instruction, table: Dict[str, str],
+                       comps: Dict[str, Computation]) -> float:
+    """HBM traffic of one top-level instruction, slice-aware.
+
+    dynamic-slice/gather read only their output-sized window of the operand;
+    dynamic-update-slice writes only the update region (loop-aliased buffer);
+    fusions bill each parameter at its *effective* size: if every use inside
+    the fused computation is a (dynamic-)slice/gather, only the sliced window
+    is read per invocation. This matters enormously for scan-over-layers:
+    the stacked [L, ...] parameter is touched 1/L per iteration.
+    """
+    out_bytes = _shape_bytes(ins.type_str)
+    if ins.opcode in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * out_bytes
+    if ins.opcode == "dynamic-update-slice":
+        upd = _shape_bytes(table.get(ins.operands[1], "")) if len(ins.operands) > 1 else out_bytes
+        return 2.0 * upd
+    if ins.opcode == "fusion":
+        called = [c for k, c in _iter_called(ins, comps) if k == "calls"]
+        body = called[0] if called else None
+        if body is None:
+            return out_bytes + sum(_shape_bytes(table.get(op, ""))
+                                   for op in dict.fromkeys(ins.operands))
+        # scan accumulators: a dynamic-update-slice whose target is a fusion
+        # parameter writes only the update window; the big buffer is aliased
+        # in place (this is exactly how XLA lowers scan ys / carries).
+        names = list(body.param_types.keys())
+        btable = _symbol_table(body)
+        producers = {bi.name: bi for bi in body.instructions}
+
+        def resolve(ref: str, depth: int = 8) -> str:
+            """Chase bitcast/copy/reshape/transpose chains back to the source."""
+            while depth > 0:
+                prod = producers.get(ref)
+                if prod is None or prod.opcode not in (
+                        "bitcast", "copy", "reshape", "transpose", "convert"):
+                    return ref
+                if not prod.operands:
+                    return ref
+                ref = prod.operands[0]
+                depth -= 1
+            return ref
+
+        aliased_params = set()
+        dus_update_bytes = 0.0
+        for bi in body.instructions:
+            if bi.opcode == "dynamic-update-slice" and bi.operands:
+                tgt = resolve(bi.operands[0])
+                if tgt in names:
+                    aliased_params.add(tgt)
+                    if len(bi.operands) > 1:
+                        dus_update_bytes += 2.0 * _shape_bytes(btable.get(bi.operands[1], ""))
+        total = 0.0
+        if aliased_params:
+            total += dus_update_bytes  # output buffer counted via its window
+        else:
+            total += out_bytes
+        for i, op in enumerate(dict.fromkeys(ins.operands)):
+            if i < len(names) and names[i] in aliased_params:
+                continue
+            full = _shape_bytes(table.get(op, ""))
+            total += _effective_param_bytes(body, i, full)
+        return total
+    in_bytes = sum(_shape_bytes(table.get(op, "")) for op in dict.fromkeys(ins.operands))
+    return out_bytes + in_bytes
+
+
+def _iter_called(ins: Instruction, comps: Dict[str, Computation]):
+    for kind, cname in _called_computations(ins):
+        comp = comps.get(cname)
+        if comp is not None:
+            yield kind, comp
+
+
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _effective_param_bytes(body: Computation, param_idx: int, full: float) -> float:
+    """Bytes actually read from fusion parameter #param_idx per invocation."""
+    # find the parameter's name: headers keep declaration order
+    names = list(body.param_types.keys())
+    if param_idx >= len(names):
+        return full
+    pname = names[param_idx]
+    uses = [i for i in body.instructions if pname in i.operands]
+    if not uses:
+        return 0.0
+    if all(u.opcode in _SLICING_OPS and u.operands and u.operands[0] == pname
+           for u in uses):
+        return sum(_shape_bytes(u.type_str) for u in uses)
+    return full

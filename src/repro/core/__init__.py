@@ -1,0 +1,24 @@
+"""ProbGraph core: probabilistic set representations for graph mining.
+
+Paper: Besta et al., "ProbGraph: High-Performance and High-Accuracy Graph
+Mining with Probabilistic Set Representations" (CS.DC 2022).
+"""
+from . import bounds, estimators, exact, graph, hashing, intersect, sketches
+from .graph import Graph, from_edge_array, erdos_renyi, kronecker, barabasi_albert
+from .sketches import SketchSet, build
+from .intersect import make_pair_cardinality_fn
+from .algorithms import (
+    triangle_count,
+    four_clique_count,
+    jarvis_patrick,
+    pair_similarity,
+    link_prediction_effectiveness,
+)
+
+__all__ = [
+    "Graph", "from_edge_array", "erdos_renyi", "kronecker", "barabasi_albert",
+    "SketchSet", "build", "make_pair_cardinality_fn",
+    "triangle_count", "four_clique_count", "jarvis_patrick",
+    "pair_similarity", "link_prediction_effectiveness",
+    "bounds", "estimators", "exact", "graph", "hashing", "intersect", "sketches",
+]

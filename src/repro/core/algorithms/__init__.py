@@ -1,0 +1,13 @@
+from .tc import triangle_count
+from .cliques import four_clique_count
+from .clustering import jarvis_patrick
+from .similarity import pair_similarity
+from .linkpred import link_prediction_effectiveness
+
+__all__ = [
+    "triangle_count",
+    "four_clique_count",
+    "jarvis_patrick",
+    "pair_similarity",
+    "link_prediction_effectiveness",
+]

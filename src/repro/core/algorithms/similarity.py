@@ -1,0 +1,58 @@
+"""Vertex similarity measures (paper Listing 3).
+
+Jaccard / Overlap / Common / Total derive from |N_u∩N_v| + exact degrees.
+Adamic-Adar / Resource-Allocation need the intersection *elements*: the
+sketch path enumerates u's neighbors (CSR) and tests membership in B_v via
+the Bloom query — the paper's "set membership" primitive.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..exact import exact_pair_intersection_elements
+from ..graph import Graph
+from ..intersect import make_pair_cardinality_fn
+from ..sketches import SketchSet, bloom_membership
+
+
+def pair_similarity(graph: Graph, pairs: jax.Array, measure: str,
+                    sketch: Optional[SketchSet] = None, **kw) -> jax.Array:
+    """measure ∈ {jaccard, overlap, common, total, adamic_adar, resource_alloc}."""
+    du = jnp.take(graph.deg, pairs[:, 0]).astype(jnp.float32)
+    dv = jnp.take(graph.deg, pairs[:, 1]).astype(jnp.float32)
+
+    if measure in ("jaccard", "overlap", "common", "total"):
+        inter = make_pair_cardinality_fn(graph, sketch, **kw)(pairs)
+        if measure == "common":
+            return inter
+        if measure == "total":
+            return du + dv - inter
+        if measure == "jaccard":
+            return inter / jnp.maximum(du + dv - inter, 1.0)
+        return inter / jnp.maximum(jnp.minimum(du, dv), 1.0)
+
+    if measure in ("adamic_adar", "resource_alloc"):
+        n = graph.n
+        if sketch is None:
+            elems = exact_pair_intersection_elements(graph, pairs)   # [P, d_max]
+        elif sketch.kind == "bf":
+            cand = jnp.take(graph.adj, pairs[:, 0], axis=0)          # N_u elements
+            rows_v = jnp.take(sketch.data, pairs[:, 1], axis=0)
+            total_bits = sketch.data.shape[1] * 32
+            member = jax.vmap(
+                lambda row, c: bloom_membership(row, c, n, sketch.num_hashes,
+                                                total_bits, sketch.seed))(rows_v, cand)
+            elems = jnp.where(member, cand, n)
+        else:
+            raise ValueError(f"{measure} needs exact or BF representation")
+        dw = jnp.take(graph.deg, jnp.where(elems < n, elems, 0)).astype(jnp.float32)
+        if measure == "adamic_adar":
+            w = 1.0 / jnp.maximum(jnp.log(jnp.maximum(dw, 2.0)), 1e-6)
+        else:
+            w = 1.0 / jnp.maximum(dw, 1.0)
+        return jnp.sum(jnp.where(elems < n, w, 0.0), axis=1)
+
+    raise ValueError(measure)

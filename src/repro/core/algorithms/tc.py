@@ -1,0 +1,44 @@
+"""Triangle Counting (paper Listing 1 + §VII estimators TC_★).
+
+TC_★ = (1/3) Σ_{(u,v)∈E} |N_u ∩ N_v|_★ over canonical edges. Exact when
+card_fn is the galloping baseline; an AU/CN (and for kH, MLE) estimator when
+card_fn is a ProbGraph estimator (Thm VII.1 gives the tail bounds).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..graph import Graph
+from ..intersect import CardFn, fold_edges, make_pair_cardinality_fn
+from ..sketches import SketchSet
+
+
+def triangle_count(graph: Graph, sketch: Optional[SketchSet] = None,
+                   card_fn: Optional[CardFn] = None,
+                   edge_chunk: int = 65536, **kw) -> jax.Array:
+    """Returns float32 TC estimate (exact integer value if sketch is None)."""
+    fn = card_fn or make_pair_cardinality_fn(graph, sketch, **kw)
+
+    def chunk(pairs, mask):
+        vals = fn(pairs)
+        return jnp.sum(jnp.where(mask, vals, 0.0))
+
+    return fold_edges(graph.edges, chunk, edge_chunk) / 3.0
+
+
+def local_clustering_coefficient(graph: Graph, sketch: Optional[SketchSet] = None,
+                                 **kw) -> jax.Array:
+    """Per-vertex clustering coefficient c_v = 2·t_v / (d_v (d_v−1)) where t_v
+    sums |N_u∩N_v| over v's incident edges (a TC application, paper §III-A)."""
+    fn = make_pair_cardinality_fn(graph, sketch, **kw)
+    edges = graph.edges
+    vals = fn(edges)
+    tv = jnp.zeros(graph.n, jnp.float32)
+    tv = tv.at[edges[:, 0]].add(vals)
+    tv = tv.at[edges[:, 1]].add(vals)
+    d = graph.deg.astype(jnp.float32)
+    denom = jnp.maximum(d * (d - 1.0), 1.0)
+    return tv / denom

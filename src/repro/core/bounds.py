@@ -1,0 +1,138 @@
+"""Concentration / MSE bounds from the paper (host-side, numpy floats).
+
+These make the accuracy knob *quantitative*: given sketch parameters, they
+bound P(|estimate - truth| >= t). Used by tests (empirical deviations must sit
+inside the bounds) and by the auto-tuner that picks sketch sizes for a target
+accuracy (data-pipeline dedup uses Prop IV.2 to size k).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def bf_and_mse_bound(inter_size: float, total_bits: int, num_hashes: int) -> float:
+    """Prop IV.1: MSE upper bound for |X∩Y|_AND (up to the (1+o(1)) factor).
+
+    Valid when b = o(sqrt(B)) and b·|X∩Y| <= 0.499·B·log(B).
+    """
+    B, b, c = float(total_bits), float(num_hashes), float(inter_size)
+    return float(np.exp(c * b / (B - 1.0)) * B / b**2 - B / b**2 - c / b)
+
+
+def bf_and_deviation_bound(inter_size: float, total_bits: int, num_hashes: int,
+                           t: float) -> float:
+    """Eq. 3: Chebyshev-on-MSE tail bound P(|est−truth| ≥ t)."""
+    if t <= 0:
+        return 1.0
+    return min(1.0, bf_and_mse_bound(inter_size, total_bits, num_hashes) / t**2)
+
+
+def bf_linear_mse_bound(set_size: float, total_bits: int, num_hashes: int,
+                        delta: float | None = None) -> float:
+    """Prop A.2: exact (assumption-free) MSE bound for linear estimators
+    δ·B_{X,1}; δ defaults to 1/b (the |X|_L / |X∩Y|_L estimator)."""
+    B, b, c = float(total_bits), float(num_hashes), float(set_size)
+    d = (1.0 / b) if delta is None else float(delta)
+    lam = c * b / B
+    bias2 = (c - d * B * (1.0 - np.exp(-lam))) ** 2
+    var = d**2 * B * (np.exp(-lam) - (1.0 + lam) * np.exp(-2.0 * lam))
+    return float(bias2 + var)
+
+
+def bf_linear_deviation_bound(set_size: float, total_bits: int, num_hashes: int,
+                              t: float, delta: float | None = None) -> float:
+    if t <= 0:
+        return 1.0
+    return min(1.0, bf_linear_mse_bound(set_size, total_bits, num_hashes, delta) / t**2)
+
+
+def minhash_deviation_bound(size_x: float, size_y: float, k: int, t: float) -> float:
+    """Prop IV.2 / IV.3 (identical form): exponential tail for kH and 1H,
+    P(| |X∩Y|_MH − |X∩Y| | ≥ t) ≤ 2·exp(−2kt² / (|X|+|Y|)²)."""
+    if t <= 0:
+        return 1.0
+    s = float(size_x) + float(size_y)
+    if s == 0:
+        return 0.0
+    return min(1.0, 2.0 * np.exp(-2.0 * k * t**2 / s**2))
+
+
+def minhash_k_for_accuracy(size_x: float, size_y: float, t: float, delta: float) -> int:
+    """Invert Prop IV.2: smallest k with deviation ≥t having prob ≤ delta."""
+    s = float(size_x) + float(size_y)
+    if t <= 0 or s == 0:
+        return 1
+    return int(np.ceil(s**2 * np.log(2.0 / delta) / (2.0 * t**2)))
+
+
+# ---------------------------------------------------------------------------
+# Triangle-count bounds (Theorem VII.1)
+# ---------------------------------------------------------------------------
+
+def tc_bf_deviation_bound(m: int, max_degree: int, total_bits: int,
+                          num_hashes: int, t: float) -> float:
+    """Thm VII.1, BF case. Valid when b·Δ ≤ 0.499·B·log(B)."""
+    if t <= 0:
+        return 1.0
+    B, b, d = float(total_bits), float(num_hashes), float(max_degree)
+    mse = np.exp(d * b / (B - 1.0)) * B / b**2 - B / b**2 - d / b
+    return min(1.0, 2.0 * m**2 * mse / (9.0 * t**2))
+
+
+def tc_minhash_deviation_bound(degrees: np.ndarray, k: int, t: float) -> float:
+    """Thm VII.1, MinHash case: 2·exp(−18kt² / (Σ d(v)²)²)."""
+    if t <= 0:
+        return 1.0
+    s2 = float(np.sum(np.asarray(degrees, dtype=np.float64) ** 2))
+    if s2 == 0:
+        return 0.0
+    return min(1.0, 2.0 * np.exp(-18.0 * k * t**2 / s2**2))
+
+
+def tc_minhash_deviation_bound_bounded_degree(degrees: np.ndarray, k: int, t: float) -> float:
+    """Thm VII.1, tighter MinHash bound via Vizing grouping:
+    2·exp(−9kt² / (4(Δ+1)·Σ d(v)³))."""
+    if t <= 0:
+        return 1.0
+    d = np.asarray(degrees, dtype=np.float64)
+    s3 = float(np.sum(d**3))
+    if s3 == 0:
+        return 0.0
+    delta = float(d.max())
+    return min(1.0, 2.0 * np.exp(-9.0 * k * t**2 / (4.0 * (delta + 1.0) * s3)))
+
+
+# ---------------------------------------------------------------------------
+# KMV bounds (Prop A.7 / A.9) — regularized incomplete beta via series
+# ---------------------------------------------------------------------------
+
+def _reg_inc_beta_int(x: float, k: int, n: int) -> float:
+    """I_x(k, n-k+1) = P(Bin(n, x) >= k), exact binomial-sum form."""
+    if x <= 0:
+        return 0.0
+    if x >= 1:
+        return 1.0
+    # sum_{i=k}^{n} C(n,i) x^i (1-x)^{n-i}, computed in log space
+    from math import lgamma as _lg
+    lx, l1x = np.log(x), np.log1p(-x)
+    total = 0.0
+    for i in range(k, n + 1):
+        logp = _lg(n + 1) - _lg(i + 1) - _lg(n - i + 1) + i * lx + (n - i) * l1x
+        total += np.exp(logp)
+    return float(min(1.0, total))
+
+
+def kmv_size_containment_prob(set_size: int, k: int, t: float) -> float:
+    """Prop A.7: P(| |X|_K − |X| | ≤ t) for a full KMV sketch."""
+    n = int(set_size)
+    if n <= k:
+        return 1.0  # sketch holds the whole set: exact
+    u = min(1.0, (k - 1) / max(n - t, 1e-12))
+    l = (k - 1) / (n + t)
+    return max(0.0, _reg_inc_beta_int(u, k, n) - _reg_inc_beta_int(l, k, n))
+
+
+def kmv_intersection_deviation_bound(union_size: int, k: int, t: float) -> float:
+    """Prop A.9 (exact-degree variant, Eq. 41): deviation prob of |X∩Y|_K
+    equals that of |X∪Y|_K at distance t."""
+    return max(0.0, 1.0 - kmv_size_containment_prob(union_size, k, t))

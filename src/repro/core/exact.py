@@ -1,0 +1,87 @@
+"""Tuned exact set-intersection baselines (paper Fig. 1, panel 2).
+
+The paper's exact baselines are "merge" (two-pointer over sorted lists) and
+"galloping" (binary search of the smaller list into the larger). Two-pointer
+merges are inherently sequential; on a vector machine the right exact kernel
+is *batched galloping*: `vmap(searchsorted)` over padded neighbor rows —
+O(d_u · log d_v) work per pair, fully lane-parallel, which is also the
+work-depth-optimal entry in paper Table IV.
+
+These serve double duty: (1) tuned exact baseline for speedup numbers,
+(2) accuracy oracle for every estimator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph
+
+
+def _row_intersect_gallop(row_a: jax.Array, row_b: jax.Array, sentinel: int) -> jax.Array:
+    """|set(a) ∩ set(b)| for sorted sentinel-padded rows via binary search."""
+    pos = jnp.searchsorted(row_b, row_a)
+    pos = jnp.clip(pos, 0, row_b.shape[0] - 1)
+    hit = (row_b[pos] == row_a) & (row_a < sentinel)
+    return jnp.sum(hit).astype(jnp.int32)
+
+
+def exact_pair_cardinalities(graph: Graph, pairs: jax.Array) -> jax.Array:
+    """|N_u ∩ N_v| for a batch of vertex pairs [P, 2] (exact, galloping)."""
+    rows_u = jnp.take(graph.adj, pairs[:, 0], axis=0)
+    rows_v = jnp.take(graph.adj, pairs[:, 1], axis=0)
+    return jax.vmap(_row_intersect_gallop, in_axes=(0, 0, None))(rows_u, rows_v, graph.n)
+
+
+def exact_pair_intersection_elements(graph: Graph, pairs: jax.Array) -> jax.Array:
+    """The intersection *elements* (padded with n) for each pair — needed by
+    Adamic-Adar / Resource-Allocation and by 4-clique enumeration."""
+    rows_u = jnp.take(graph.adj, pairs[:, 0], axis=0)
+    rows_v = jnp.take(graph.adj, pairs[:, 1], axis=0)
+
+    def one(a, b):
+        pos = jnp.clip(jnp.searchsorted(b, a), 0, b.shape[0] - 1)
+        hit = (b[pos] == a) & (a < graph.n)
+        return jnp.where(hit, a, graph.n)
+
+    return jax.vmap(one)(rows_u, rows_v)
+
+
+def exact_triangle_count(graph: Graph, edge_chunk: int = 65536) -> jax.Array:
+    """TC = (1/3)·Σ_{(u,v)∈E} |N_u ∩ N_v| over canonical edges (u<v).
+
+    Over canonical (u<v) edges each triangle {a<b<c} is counted once per edge
+    = 3 times, hence /3 (Listing 1 formulation).
+    """
+    edges = graph.edges
+
+    def chunk_fn(pairs):
+        return jnp.sum(exact_pair_cardinalities(graph, pairs).astype(jnp.int32))
+
+    total = _fold_edges(graph, edges, chunk_fn, edge_chunk)
+    return total // 3
+
+
+def _fold_edges(graph: Graph, edges: jax.Array, chunk_fn, edge_chunk: int):
+    m = edges.shape[0]
+    if m == 0:
+        return jnp.int32(0)
+    if m <= edge_chunk:
+        return chunk_fn(edges)
+    pad = (-m) % edge_chunk
+    # pad with a self-pair of vertex 0's padded row? use (0,0): N_0∩N_0 = d_0
+    # instead pad with an out-of-range pair that intersects to 0: (n-1, n-1) is
+    # wrong too; use dedicated masking:
+    edges_p = jnp.concatenate(
+        [edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
+    mask = jnp.concatenate([jnp.ones(m, bool), jnp.zeros(pad, bool)])
+
+    def body(c, xs):
+        pairs, msk = xs
+        vals = exact_pair_cardinalities(graph, pairs).astype(jnp.int32)
+        return c + jnp.sum(jnp.where(msk, vals, 0)), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.int32(0),
+        (edges_p.reshape(-1, edge_chunk, 2), mask.reshape(-1, edge_chunk)))
+    return total

@@ -1,0 +1,205 @@
+"""Graph model: CSR + padded adjacency, generators, and host utilities.
+
+The paper stores G in CSR (indptr + sorted neighbor arrays). For TPU/JAX we
+additionally keep a *padded adjacency* matrix ``adj[n, d_max]`` (rows sorted,
+padded with the sentinel ``n``) so that per-edge neighborhood gathers are a
+single `jnp.take`, and vmapped set algebra (merge / galloping) is regular.
+
+Degree skew makes the padded form wasteful for power-law graphs — exactly the
+load-imbalance pathology the paper's fixed-size sketches remove — but it is
+the right *exact-baseline* representation on a vector machine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import np_hash_u32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph in CSR + padded-adjacency form (device arrays).
+
+    Attributes:
+      indptr:  int32[n+1]   CSR row pointers.
+      indices: int32[2m]    concatenated sorted neighbor lists.
+      adj:     int32[n, d_max] padded adjacency (pad value == n).
+      deg:     int32[n]     vertex degrees.
+      edges:   int32[m, 2]  unique undirected edges with u < v.
+      n_vertices / n_edges / d_max: static ints (aux data).
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    adj: jax.Array
+    deg: jax.Array
+    edges: jax.Array
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    d_max: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.n_vertices
+
+    @property
+    def m(self) -> int:
+        return self.n_edges
+
+
+def from_edge_array(n: int, edges: np.ndarray, pad_to_max_degree: Optional[int] = None) -> Graph:
+    """Build a Graph from an (possibly duplicated / both-direction) edge array."""
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0:
+        edges = np.zeros((0, 2), dtype=np.int64)
+    # drop self loops, canonicalize u < v, dedupe
+    u, v = edges[:, 0], edges[:, 1]
+    keep = u != v
+    u, v = u[keep], v[keep]
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    key = lo * n + hi
+    key = np.unique(key)
+    lo, hi = key // n, key % n
+    m = lo.shape[0]
+
+    # symmetric CSR
+    src = np.concatenate([lo, hi])
+    dst = np.concatenate([hi, lo])
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    deg = np.bincount(src, minlength=n).astype(np.int32)
+    indptr = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(deg, out=indptr[1:])
+    d_max = int(deg.max()) if n else 0
+    if pad_to_max_degree is not None:
+        d_max = max(d_max, pad_to_max_degree)
+    d_max = max(d_max, 1)
+
+    # padded adjacency, pad sentinel = n (sorts after every valid id)
+    adj = np.full((n, d_max), n, dtype=np.int32)
+    col = np.arange(len(src)) - indptr[src]
+    adj[src, col] = dst
+
+    return Graph(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(dst.astype(np.int32)),
+        adj=jnp.asarray(adj),
+        deg=jnp.asarray(deg),
+        edges=jnp.asarray(np.stack([lo, hi], axis=1).astype(np.int32)),
+        n_vertices=int(n),
+        n_edges=int(m),
+        d_max=int(d_max),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Generators (paper: Kronecker power-law synthetics + real-world sets)
+# ----------------------------------------------------------------------------
+
+def erdos_renyi(n: int, p: float, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    # sample via geometric skipping to avoid n^2 memory on big n
+    max_pairs = n * (n - 1) // 2
+    exp_edges = int(p * max_pairs)
+    if max_pairs <= 4_000_000:
+        iu = np.triu_indices(n, k=1)
+        mask = rng.random(iu[0].shape[0]) < p
+        edges = np.stack([iu[0][mask], iu[1][mask]], axis=1)
+    else:
+        u = rng.integers(0, n, size=2 * exp_edges)
+        v = rng.integers(0, n, size=2 * exp_edges)
+        edges = np.stack([u, v], axis=1)
+    return from_edge_array(n, edges)
+
+
+def kronecker(scale: int, edge_factor: int = 16, seed: int = 0,
+              a: float = 0.57, b: float = 0.19, c: float = 0.19) -> Graph:
+    """Graph500-style stochastic Kronecker (power-law degree distribution)."""
+    n = 1 << scale
+    m = edge_factor * n
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r1 = rng.random(m)
+        r2 = rng.random(m)
+        src_bit = r1 > ab
+        thresh = np.where(src_bit, c / (1.0 - ab), a / ab)
+        dst_bit = r2 > thresh
+        src += src_bit.astype(np.int64) << bit
+        dst += dst_bit.astype(np.int64) << bit
+    # permute vertex ids to destroy locality (standard practice)
+    perm = rng.permutation(n)
+    return from_edge_array(n, np.stack([perm[src], perm[dst]], axis=1))
+
+
+def barabasi_albert(n: int, m_attach: int = 4, seed: int = 0) -> Graph:
+    """Preferential-attachment power-law graph (cheap host construction)."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(m_attach))
+    repeated: list[int] = []
+    edges = []
+    for v in range(m_attach, n):
+        for t in targets:
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * m_attach)
+        idx = rng.integers(0, len(repeated), size=m_attach)
+        targets = [repeated[i] for i in idx]
+    return from_edge_array(n, np.asarray(edges, dtype=np.int64))
+
+
+def random_bipartite_community(n: int, communities: int, p_in: float, p_out: float,
+                               seed: int = 0) -> Graph:
+    """Planted-partition graph: dense communities, sparse cross edges."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, communities, size=n)
+    u = rng.integers(0, n, size=int(6 * n * max(p_in, 1e-6) * n / communities) + 4 * n)
+    v = rng.integers(0, n, size=u.shape[0])
+    same = labels[u] == labels[v]
+    keep = np.where(same, rng.random(u.shape[0]) < p_in, rng.random(u.shape[0]) < p_out)
+    return from_edge_array(n, np.stack([u[keep], v[keep]], axis=1))
+
+
+# ----------------------------------------------------------------------------
+# Host helpers
+# ----------------------------------------------------------------------------
+
+def neighbors_np(g: Graph, v: int) -> np.ndarray:
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    return indices[indptr[v]:indptr[v + 1]]
+
+
+def triangle_count_dense(g: Graph) -> int:
+    """Exact TC oracle via dense A^3 trace (small graphs only)."""
+    n = g.n
+    a = np.zeros((n, n), dtype=np.int64)
+    e = np.asarray(g.edges)
+    a[e[:, 0], e[:, 1]] = 1
+    a[e[:, 1], e[:, 0]] = 1
+    return int(np.trace(a @ a @ a) // 6)
+
+
+def four_clique_count_bruteforce(g: Graph) -> int:
+    """Exact 4-clique oracle (tiny graphs only): O(m * d^2)."""
+    n = g.n
+    adj_sets = [set(neighbors_np(g, v).tolist()) for v in range(n)]
+    count = 0
+    e = np.asarray(g.edges)
+    for u, v in e:
+        common = sorted(adj_sets[u] & adj_sets[v])
+        for i in range(len(common)):
+            wi = common[i]
+            for j in range(i + 1, len(common)):
+                wj = common[j]
+                if wj in adj_sets[wi]:
+                    count += 1
+    return count // 6  # each 4-clique counted once per each of its 6 edges

@@ -1,0 +1,111 @@
+"""Uniform |N_u ∩ N_v| providers: exact or any ProbGraph estimator.
+
+`make_pair_cardinality_fn(graph, sketch)` returns a batched pure function
+pairs[P,2] -> float32[P]; this is the single seam through which every graph
+algorithm (tc / cliques / clustering / similarity / linkpred) consumes either
+the exact galloping baseline or a sketch estimator — the paper's "plug in PG
+routines in place of exact set intersections" (Listing 6).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators as est
+from .exact import exact_pair_cardinalities
+from .graph import Graph
+from .sketches import SketchSet, onehash_values
+
+CardFn = Callable[[jax.Array], jax.Array]
+
+
+def make_pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet] = None,
+                             use_kernel: bool = False, variant: str = "union",
+                             estimator: Optional[str] = None) -> CardFn:
+    if sketch is None:
+        def exact_fn(pairs: jax.Array) -> jax.Array:
+            return exact_pair_cardinalities(graph, pairs).astype(jnp.float32)
+        return exact_fn
+
+    kind = estimator or sketch.kind
+    deg = graph.deg
+
+    if sketch.kind == "bf":
+        data = sketch.data
+        b = sketch.num_hashes
+        total_bits = data.shape[1] * 32
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            def bf_kernel_fn(pairs: jax.Array) -> jax.Array:
+                ones = kops.bf_edge_intersect(data, pairs)
+                if kind == "bf_l":
+                    return ones.astype(jnp.float32) / b
+                return est.bf_intersection_and_from_ones(ones, total_bits, b)
+            return bf_kernel_fn
+
+        def bf_fn(pairs: jax.Array) -> jax.Array:
+            ru = jnp.take(data, pairs[:, 0], axis=0)
+            rv = jnp.take(data, pairs[:, 1], axis=0)
+            if kind == "bf_l":
+                return est.bf_intersection_limit(ru, rv, b)
+            if kind == "bf_or":
+                du = jnp.take(deg, pairs[:, 0])
+                dv = jnp.take(deg, pairs[:, 1])
+                return est.bf_intersection_or(ru, rv, b, du, dv)
+            return est.bf_intersection_and(ru, rv, b)
+        return bf_fn
+
+    if sketch.kind == "kh":
+        def kh_fn(pairs: jax.Array) -> jax.Array:
+            ru = jnp.take(sketch.data, pairs[:, 0], axis=0)
+            rv = jnp.take(sketch.data, pairs[:, 1], axis=0)
+            du = jnp.take(deg, pairs[:, 0])
+            dv = jnp.take(deg, pairs[:, 1])
+            return est.khash_intersection(ru, rv, du, dv, sketch.n)
+        return kh_fn
+
+    if sketch.kind == "1h":
+        def oneh_fn(pairs: jax.Array) -> jax.Array:
+            ru = jnp.take(sketch.data, pairs[:, 0], axis=0)
+            rv = jnp.take(sketch.data, pairs[:, 1], axis=0)
+            du = jnp.take(deg, pairs[:, 0])
+            dv = jnp.take(deg, pairs[:, 1])
+            hu = onehash_values(ru, sketch.n, sketch.seed)
+            hv = onehash_values(rv, sketch.n, sketch.seed)
+            return est.onehash_intersection(ru, rv, hu, hv, du, dv, sketch.n, variant)
+        return oneh_fn
+
+    if sketch.kind == "kmv":
+        def kmv_fn(pairs: jax.Array) -> jax.Array:
+            ru = jnp.take(sketch.data, pairs[:, 0], axis=0)
+            rv = jnp.take(sketch.data, pairs[:, 1], axis=0)
+            du = jnp.take(deg, pairs[:, 0])
+            dv = jnp.take(deg, pairs[:, 1])
+            return est.kmv_intersection(ru, rv, du, dv)
+        return kmv_fn
+
+    raise ValueError(f"unknown sketch kind {sketch.kind}")
+
+
+def fold_edges(edges: jax.Array, chunk_fn, edge_chunk: int = 65536):
+    """Masked scan-fold of `chunk_fn(pairs, mask) -> scalar` over edge chunks."""
+    m = edges.shape[0]
+    if m == 0:
+        return jnp.float32(0)
+    pad = (-m) % edge_chunk if m > edge_chunk else 0
+    if m <= edge_chunk:
+        return chunk_fn(edges, jnp.ones(m, bool))
+    edges_p = jnp.concatenate([edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
+    mask = jnp.concatenate([jnp.ones(m, bool), jnp.zeros(pad, bool)])
+
+    def body(c, xs):
+        pairs, msk = xs
+        return c + chunk_fn(pairs, msk), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0),
+        (edges_p.reshape(-1, edge_chunk, 2), mask.reshape(-1, edge_chunk)))
+    return total

@@ -1,0 +1,6 @@
+from . import fault, sharding
+
+# NOTE: `step` imports repro.models (which imports distributed.sharding);
+# import it explicitly as `repro.distributed.step` to avoid a cycle here.
+
+__all__ = ["sharding", "fault"]

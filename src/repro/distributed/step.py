@@ -1,0 +1,134 @@
+"""Train / decode step factories and sharding assembly.
+
+The distribution strategy is GSPMD: one jit per step with explicit
+`in_shardings`/`out_shardings` derived from logical-axis trees
+(params_logical_axes / cache_logical_axes / optimizer.state_logical_axes),
+plus `with_sharding_constraint` hints inside the model (shard_as).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (ModelConfig, ShapeConfig, init_params, loss_fn,
+                          init_cache, decode_step, params_logical_axes,
+                          cache_logical_axes)
+from repro.optim import error_feedback_compress
+from . import sharding as SH
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer, compress_grads: bool = False):
+    """state = {"params", "opt", ["ef"]}; returns (state, metrics)."""
+
+    def train_step(state, batch):
+        lossval, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch))(state["params"])
+        if compress_grads:
+            grads, new_ef = error_feedback_compress(grads, state["ef"])
+        new_params, new_opt = optimizer.update(grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress_grads:
+            new_state["ef"] = new_ef
+        from repro.optim.adamw import global_norm
+        metrics = {"loss": lossval, "grad_norm": global_norm(grads)}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, inputs):
+        return decode_step(params, cache, cfg, inputs)
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, optimizer, key,
+                     compress_grads: bool = False) -> Dict[str, Any]:
+    params = init_params(cfg, key)
+    state = {"params": params, "opt": optimizer.init(params)}
+    if compress_grads:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _shard_tree(axes_tree, shapes_tree, mesh, overrides=None):
+    return SH.sharding_for_tree(axes_tree, shapes_tree, mesh, overrides)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_shapes(cfg: ModelConfig, optimizer, compress_grads=False):
+    p = param_shapes(cfg)
+    shapes = {"params": p, "opt": jax.eval_shape(optimizer.init, p)}
+    if compress_grads:
+        shapes["ef"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p)
+    return shapes
+
+
+def train_state_shardings(cfg: ModelConfig, optimizer, mesh: Mesh,
+                          overrides=None, compress_grads=False):
+    p_axes = params_logical_axes(cfg)
+    p_shapes = param_shapes(cfg)
+    shard = {"params": _shard_tree(p_axes, p_shapes, mesh, overrides)}
+    opt_axes = optimizer.state_logical_axes(p_axes, p_shapes)
+    opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+    shard["opt"] = _shard_tree(opt_axes, opt_shapes, mesh, overrides)
+    if compress_grads:
+        shard["ef"] = shard["params"]
+    return shard
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    overrides=None):
+    with SH.use_rules(mesh, overrides):
+        tok_spec = SH.spec_for(("batch", "seq"),
+                               (shape.global_batch, shape.seq_len), mesh)
+        out = {"inputs": NamedSharding(mesh, tok_spec),
+               "labels": NamedSharding(mesh, tok_spec)}
+        if cfg.input_mode == "embeddings":
+            emb_spec = SH.spec_for(("batch", "seq", "embed_act"),
+                                   (shape.global_batch, shape.seq_len, cfg.d_model), mesh)
+            out["inputs"] = NamedSharding(mesh, emb_spec)
+        if cfg.rope_kind == "mrope":
+            pos_spec = SH.spec_for(("batch", "seq", None),
+                                   (shape.global_batch, shape.seq_len, 3), mesh)
+            out["positions"] = NamedSharding(mesh, pos_spec)
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh,
+                    overrides=None):
+    c_axes = cache_logical_axes(cfg)
+    c_shapes = cache_shapes(cfg, batch, max_len)
+    return _shard_tree(c_axes, c_shapes, mesh, overrides)
+
+
+def logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                    overrides=None):
+    with SH.use_rules(mesh, overrides):
+        spec = SH.spec_for(("batch", None, "vocab"),
+                           (batch, seq, cfg.padded_vocab), mesh)
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

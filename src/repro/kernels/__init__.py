@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for ProbGraph hot spots (+ ops wrappers, ref oracles)."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,140 @@
+"""Pallas TPU kernels for Bloom-filter set algebra (ProbGraph hot loop).
+
+The paper's CPU hot loop is `popcnt(AND(Bx, By))` over AVX lanes; the TPU
+adaptation runs it on the VPU (8×128 lanes) with explicit VMEM tiling:
+
+  * ``bf_intersect_pairs_kernel``: dense [E, W] x [E, W] -> [E] AND+popcount,
+    tiled (block_e × block_w), accumulating over the word-tile grid axis.
+    This is the roofline-friendly form: arithmetic intensity is fixed
+    (1 AND + 1 popcount + 1 add per 8 bytes), so the kernel is HBM-bound and
+    tiles are chosen to stream at full bandwidth.
+
+  * ``bf_edge_intersect_kernel``: the fused-gather form. The edge list lives
+    in SMEM via PrefetchScalarGridSpec; the BlockSpec ``index_map`` reads the
+    row ids and DMAs the two Bloom rows straight from the sketch matrix in
+    HBM — no [E, W] gather is ever materialized. This is the TPU-idiomatic
+    replacement of the CPU pointer-gather, and saves 2·E·W words of HBM
+    round-trip when E ≫ n (skewed graphs revisit hub rows, which then stay
+    in VMEM across consecutive edges).
+
+  * 3-way AND variant for the 4-clique triple intersections.
+
+All kernels validate in interpret mode against ``ref.py`` (see tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ----------------------------------------------------------------------------
+# dense pairs kernel
+# ----------------------------------------------------------------------------
+
+def _pairs_kernel(a_ref, b_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cnt = jax.lax.population_count(a_ref[...] & b_ref[...])
+    o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
+
+
+def bf_intersect_pairs(a: jax.Array, b: jax.Array, *, block_e: int = 256,
+                       block_w: int = 512, interpret: bool = False) -> jax.Array:
+    """uint32[E, W] x uint32[E, W] -> int32[E]; E, W already block-padded."""
+    e, w = a.shape
+    block_e = min(block_e, e)
+    block_w = min(block_w, w)
+    grid = (pl.cdiv(e, block_e), pl.cdiv(w, block_w))
+    return pl.pallas_call(
+        _pairs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, block_w), lambda i, j: (i, j)),
+            pl.BlockSpec((block_e, block_w), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_e,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _pairs3_kernel(a_ref, b_ref, c_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cnt = jax.lax.population_count(a_ref[...] & b_ref[...] & c_ref[...])
+    o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
+
+
+def bf_intersect3_pairs(a: jax.Array, b: jax.Array, c: jax.Array, *,
+                        block_e: int = 256, block_w: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    e, w = a.shape
+    block_e = min(block_e, e)
+    block_w = min(block_w, w)
+    grid = (pl.cdiv(e, block_e), pl.cdiv(w, block_w))
+    spec = pl.BlockSpec((block_e, block_w), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _pairs3_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((block_e,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
+        interpret=interpret,
+    )(a, b, c)
+
+
+# ----------------------------------------------------------------------------
+# fused-gather edge kernel (scalar-prefetched edge list)
+# ----------------------------------------------------------------------------
+
+def _edge_kernel(u_ref, v_ref, a_ref, b_ref, o_ref):
+    # u_ref/v_ref are the prefetched scalar index arrays (SMEM); the actual
+    # gather already happened in the index_map; here we just AND+popcount.
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cnt = jax.lax.population_count(a_ref[...] & b_ref[...])
+    o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
+
+
+def bf_edge_intersect(bloom: jax.Array, edges: jax.Array, *,
+                      block_w: int = 512, interpret: bool = False) -> jax.Array:
+    """uint32[n, W] sketch matrix + int32[E, 2] edges -> int32[E].
+
+    Rows are gathered inside the BlockSpec index_map (scalar prefetch);
+    grid = (E, W/block_w); each step DMAs two (1, block_w) row slabs.
+    """
+    n, w = bloom.shape
+    e = edges.shape[0]
+    block_w = min(block_w, w)
+    grid = (e, pl.cdiv(w, block_w))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_w), lambda i, j, u, v: (u[i], j)),
+            pl.BlockSpec((1, block_w), lambda i, j, u, v: (v[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j, u, v: (i,)),
+    )
+    return pl.pallas_call(
+        _edge_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
+        interpret=interpret,
+    )(edges[:, 0], edges[:, 1], bloom, bloom)

@@ -1,0 +1,112 @@
+"""Pallas flash-attention (forward) — the designed fix for the dominant
+memory term of the train/prefill cells (EXPERIMENTS.md §Perf).
+
+The XLA-level chunked attention in models/layers.py must materialize every
+[chunk_q, chunk_kv] f32 probability block in HBM (scan residuals / dot
+operands); profiling shows those blocks dominate HBM traffic for every
+attention arch. This kernel keeps the running max / denominator / output
+accumulator in VMEM across kv blocks, so HBM traffic drops to Q/K/V/O only
+(≈ 4·S·D vs S²-proportional).
+
+Layout: q [BH, Sq, D] (GQA groups folded into the leading dim), k/v
+[BKV, Skv, D]; grid (BH, nq). Each step streams kv blocks with an in-kernel
+fori_loop over VMEM-resident K/V rows. The TPU production variant would
+put nkv in the grid with VMEM scratch accumulators; this form keeps the
+whole K/V in VMEM per (bh, qi) step — correct, and sufficient for
+interpret-mode validation + roofline modeling (HBM bytes = 4·S·D·dtype).
+
+Causal + optional sliding window. Backward runs through jax.checkpoint
+recompute of this kernel (custom_vjp with dedicated bwd kernels is the
+follow-up noted in §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, window: int,
+               scale: float):
+    bq = q_ref.shape[1]
+    skv = k_ref.shape[1]
+    d = q_ref.shape[2]
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale                    # [bq, D]
+    q_pos = qi * bq + lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    nkv = skv // block_kv
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_blk = lax.dynamic_slice_in_dim(k_ref[0], j * block_kv, block_kv, 0)
+        v_blk = lax.dynamic_slice_in_dim(v_ref[0], j * block_kv, block_kv, 0)
+        kv_pos = j * block_kv + lax.broadcasted_iota(jnp.int32, (1, block_kv), 1)
+        s = jnp.dot(q, k_blk.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)          # [bq, bkv]
+        mask = kv_pos <= q_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v_blk.astype(jnp.float32),
+                                        preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = lax.fori_loop(0, nkv, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_folded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           groups: int, window: int = 0, block_q: int = 128,
+                           block_kv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: [BH, Sq, D] with BH = B·KV·groups; k/v: [BKV, Skv, D]."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    grid = (bh, pl.cdiv(sq, block_q))
+    scale = 1.0 / math.sqrt(d)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, block_kv=block_kv, window=window,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, qi: (i, qi, 0)),
+            pl.BlockSpec((1, skv, d), lambda i, qi, g=groups: (i // g, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda i, qi, g=groups: (i // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, qi: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int = 0, block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Standard layout wrapper: q [B,S,H,D], k/v [B,S,KV,D] -> [B,S,H,D]."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = jnp.moveaxis(q.reshape(b, sq, kv, g, d), 1, 3).reshape(b * kv * g, sq, d)
+    kf = jnp.moveaxis(k, 1, 2).reshape(b * kv, -1, d)
+    vf = jnp.moveaxis(v, 1, 2).reshape(b * kv, -1, d)
+    of = flash_attention_folded(qf, kf, vf, groups=g, window=window,
+                                block_q=block_q, block_kv=block_kv,
+                                interpret=interpret)
+    o = of.reshape(b, kv, g, sq, d)
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, d)

@@ -1,0 +1,92 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends the kernels run in interpret mode (Python evaluation of
+the kernel body) so correctness is validated everywhere; on TPU they compile
+to Mosaic. Inputs are padded to block multiples here and the pad is sliced
+off after the call, so callers never see blocking constraints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bf_intersect as _bf
+from . import mh_intersect as _mh
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, fill=0) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad, *x.shape[1:]), fill, x.dtype)], axis=0)
+
+
+def _pad_cols(x: jax.Array, mult: int, fill=0) -> jax.Array:
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((x.shape[0], pad), fill, x.dtype)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "block_w"))
+def bf_intersect_pairs(a: jax.Array, b: jax.Array, block_e: int = 256,
+                       block_w: int = 512) -> jax.Array:
+    e = a.shape[0]
+    be = min(block_e, max(e, 1))
+    a2 = _pad_cols(_pad_rows(a, be), 2)
+    b2 = _pad_cols(_pad_rows(b, be), 2)
+    out = _bf.bf_intersect_pairs(a2, b2, block_e=be, block_w=block_w,
+                                 interpret=_interpret())
+    return out[:e]
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "block_w"))
+def bf_intersect3_pairs(a: jax.Array, b: jax.Array, c: jax.Array,
+                        block_e: int = 256, block_w: int = 512) -> jax.Array:
+    e = a.shape[0]
+    be = min(block_e, max(e, 1))
+    a2 = _pad_cols(_pad_rows(a, be), 2)
+    b2 = _pad_cols(_pad_rows(b, be), 2)
+    c2 = _pad_cols(_pad_rows(c, be), 2)
+    out = _bf.bf_intersect3_pairs(a2, b2, c2, block_e=be, block_w=block_w,
+                                  interpret=_interpret())
+    return out[:e]
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def bf_edge_intersect(bloom: jax.Array, edges: jax.Array,
+                      block_w: int = 512) -> jax.Array:
+    return _bf.bf_edge_intersect(bloom, edges.astype(jnp.int32),
+                                 block_w=block_w, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel", "block_e"))
+def mh_intersect_pairs(a: jax.Array, b: jax.Array, sentinel: int,
+                       block_e: int = 128) -> jax.Array:
+    e = a.shape[0]
+    be = min(block_e, max(e, 1))
+    a2 = _pad_rows(a, be, fill=sentinel)
+    b2 = _pad_rows(b, be, fill=sentinel)
+    out = _mh.mh_intersect_pairs(a2, b2, sentinel, block_e=be,
+                                 interpret=_interpret())
+    return out[:e]
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel", "block_e"))
+def khash_match_pairs(a: jax.Array, b: jax.Array, sentinel: int,
+                      block_e: int = 512) -> jax.Array:
+    e = a.shape[0]
+    be = min(block_e, max(e, 1))
+    a2 = _pad_rows(a, be, fill=sentinel)
+    b2 = _pad_rows(b, be, fill=sentinel)
+    out = _mh.khash_match_pairs(a2, b2, sentinel, block_e=be,
+                                interpret=_interpret())
+    return out[:e]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bf_intersect_pairs(a: jax.Array, b: jax.Array) -> jax.Array:
+    """popcount(a AND b) summed over words. a, b: uint32[E, W] -> int32[E]."""
+    return jnp.sum(jax.lax.population_count(a & b), axis=-1).astype(jnp.int32)
+
+
+def bf_union_pairs(a: jax.Array, b: jax.Array) -> jax.Array:
+    """popcount(a OR b) summed over words (for the OR estimator)."""
+    return jnp.sum(jax.lax.population_count(a | b), axis=-1).astype(jnp.int32)
+
+
+def bf_intersect3_pairs(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """popcount(a AND b AND c) (4-clique triple intersections)."""
+    return jnp.sum(jax.lax.population_count(a & b & c), axis=-1).astype(jnp.int32)
+
+
+def bf_edge_intersect(bloom: jax.Array, edges: jax.Array) -> jax.Array:
+    """Gather rows u, v from bloom[n, W] per edge and AND-popcount."""
+    a = jnp.take(bloom, edges[:, 0], axis=0)
+    b = jnp.take(bloom, edges[:, 1], axis=0)
+    return bf_intersect_pairs(a, b)
+
+
+def mh_intersect_pairs(a: jax.Array, b: jax.Array, sentinel: int) -> jax.Array:
+    """|set(a) ∩ set(b)| for sentinel-padded duplicate-free int32[E, k] rows."""
+    eq = a[..., :, None] == b[..., None, :]
+    valid = (a[..., :, None] < sentinel) & (b[..., None, :] < sentinel)
+    return jnp.sum(eq & valid, axis=(-2, -1)).astype(jnp.int32)
+
+
+def khash_match_pairs(a: jax.Array, b: jax.Array, sentinel: int) -> jax.Array:
+    """Aligned (per-hash-function) match count for k-Hash sketches."""
+    return jnp.sum((a == b) & (a < sentinel) & (b < sentinel), axis=-1).astype(jnp.int32)
+
+
+def causal_attention(q, k, v, window: int = 0):
+    """Plain causal (optionally sliding-window) attention oracle.
+
+    q: [B,S,H,D], k/v: [B,S,KV,D] -> [B,S,H,D]; fp32 softmax.
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bqkgd,bckd->bkgqc", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(s)[:, None]
+    cpos = jnp.arange(s)[None, :]
+    mask = cpos <= qpos
+    if window:
+        mask &= cpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend init. 512 host devices let jax.make_mesh build the
+# production meshes (16×16 single-pod, 2×16×16 multi-pod) for compile-only
+# dry-runs — no real allocation happens (inputs are ShapeDtypeStructs).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces:
+  * proof of a coherent distribution config (`.lower().compile()` succeeds)
+  * `memory_analysis()` — per-device bytes (does it fit 16 GB v5e HBM?)
+  * `cost_analysis()` + parsed-HLO roofline terms (analysis.hlo/roofline)
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
+summarized by benchmarks/roofline.py into EXPERIMENTS.md tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_v3 --shape train_4k
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro import configs as CFG
+from repro.analysis import hlo as hlo_an
+from repro.analysis import roofline as rl
+from repro.distributed import sharding as SH
+from repro.distributed import step as STEP
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import SHAPES
+from repro.optim import AdamW, Adafactor
+
+# Giant models: factored second moments (AdamW state would not fit v5e HBM;
+# see EXPERIMENTS.md §Dry-run).
+ADAFACTOR_ARCHS = {"deepseek_v3", "jamba15_large"}
+
+# Beyond-baseline optimization profiles (EXPERIMENTS.md §Perf):
+#   * shard_map expert-parallel MoE (kills the GSPMD scatter-dispatch ARs)
+#   * gemma: MQA head_dim TP is a pessimization (score-block psums) — the
+#     8-head attention runs data-parallel only
+OPT_PROFILES = {
+    "deepseek_v3": ({"moe_impl": "ep"}, None),
+    "phi35_moe": ({"moe_impl": "ep"}, None),
+    "jamba15_large": ({"moe_impl": "ep"}, None),
+    "gemma_2b": (None, {"head_dim_tp": None}),
+}
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def make_optimizer(arch: str):
+    if arch in ADAFACTOR_ARCHS:
+        return Adafactor(learning_rate=1e-3)
+    return AdamW(learning_rate=1e-3, keep_master=True)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rule_overrides: Optional[Dict] = None,
+             save: bool = True, tag: str = "",
+             cfg_overrides: Optional[Dict] = None) -> Dict:
+    import dataclasses as _dc
+    cfg = CFG.get(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    optimizer = make_optimizer(arch)
+    t0 = time.time()
+
+    with SH.use_rules(mesh, rule_overrides):
+        if shape.kind == "decode":
+            serve = STEP.make_decode_step(cfg)
+            p_shard = STEP.train_state_shardings(cfg, optimizer, mesh,
+                                                 rule_overrides)["params"]
+            c_shard = STEP.cache_shardings(cfg, shape.global_batch,
+                                           shape.seq_len, mesh, rule_overrides)
+            in_specs = input_specs(cfg, shape)
+            in_shard = jax.tree.map(
+                lambda _: STEP.batch_shardings(cfg, shape, mesh, rule_overrides)["inputs"],
+                in_specs)
+            p_sds = STEP.param_shapes(cfg)
+            c_sds = STEP.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+            logits_shard = STEP.logits_sharding(cfg, mesh, shape.global_batch, 1,
+                                                overrides=rule_overrides)
+            jitted = jax.jit(serve,
+                             in_shardings=(p_shard, c_shard, in_shard["inputs"]),
+                             out_shardings=(logits_shard, c_shard))
+            lowered = jitted.lower(p_sds, c_sds, in_specs["inputs"])
+        else:
+            train = STEP.make_train_step(cfg, optimizer)
+            s_shard = STEP.train_state_shardings(cfg, optimizer, mesh, rule_overrides)
+            b_shard = STEP.batch_shardings(cfg, shape, mesh, rule_overrides)
+            s_sds = STEP.train_state_shapes(cfg, optimizer)
+            b_sds = input_specs(cfg, shape)
+            b_shard = {k: b_shard[k] for k in b_sds}
+            jitted = jax.jit(train, in_shardings=(s_shard, b_shard),
+                             out_shardings=(s_shard, None))
+            lowered = jitted.lower(s_sds, b_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    stats = hlo_an.analyze(text)
+    per_dev_bytes = None
+    mem_dict = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_dict[attr] = int(getattr(mem, attr))
+    if mem_dict:
+        per_dev_bytes = (mem_dict.get("argument_size_in_bytes", 0)
+                         - mem_dict.get("alias_size_in_bytes", 0)
+                         + mem_dict.get("output_size_in_bytes", 0)
+                         + mem_dict.get("temp_size_in_bytes", 0))
+
+    roof = rl.build(arch, shape, cfg, mesh_name, chips, stats, per_dev_bytes)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_dict,
+        "cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        "hlo_stats": stats.to_json(),
+        "roofline": roof.to_json(),
+    }
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf optimization profiles")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    if args.opt and not args.tag:
+        args.tag = "opt"
+
+    archs = CFG.registry() if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        shapes = CFG.shapes_for(arch) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                out = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}"
+                                   + (f"__{args.tag}" if args.tag else "") + ".json")
+                if args.skip_existing and os.path.exists(out):
+                    print(f"[skip] {arch} {shape_name} {mesh_name}")
+                    continue
+                label = f"{arch:16s} {shape_name:12s} {mesh_name}"
+                cfg_over, rule_over = (OPT_PROFILES.get(arch, (None, None))
+                                       if args.opt else (None, None))
+                try:
+                    t0 = time.time()
+                    r = run_cell(arch, shape_name, multi, tag=args.tag,
+                                 cfg_overrides=cfg_over,
+                                 rule_overrides=rule_over)
+                    roof = r["roofline"]
+                    print(f"[ ok ] {label} compile={r['compile_s']:.0f}s "
+                          f"mem/dev={roof['per_device_memory_gb']:.2f}GB "
+                          f"terms(c/m/n)=({roof['compute_s']:.3f}/"
+                          f"{roof['memory_s']:.3f}/{roof['collective_s']:.3f})s "
+                          f"bottleneck={roof['bottleneck']} "
+                          f"useful={roof['useful_ratio']:.2f} "
+                          f"({time.time()-t0:.0f}s)")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((label, repr(e)))
+                    print(f"[FAIL] {label}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for lbl, err in failures:
+            print(" ", lbl, err)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

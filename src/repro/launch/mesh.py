@@ -1,0 +1,21 @@
+"""Production mesh definitions.
+
+A v5e pod is a 16×16 torus (256 chips). Single-pod runs use a
+("data", "model") = (16, 16) mesh; multi-pod adds a leading "pod" axis over
+the DCN links. Functions (not module constants) so importing never touches
+jax device state — the dry-run driver must set XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,94 @@
+"""Batched serving driver: prefill-free cached decode with request batching.
+
+Serves a (reduced, CPU-runnable) model: requests arrive as prompts, are
+teacher-forced through `decode_step` to fill the KV cache (synchronized
+batch), then sampled autoregressively. On a pod the same loop runs the full
+configs with the decode-cell shardings proven by the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as CFG
+from repro.models import reduced, init_params, init_cache, decode_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    arch: str = "gemma_2b"
+    batch: int = 4
+    max_len: int = 128
+    temperature: float = 0.8
+    seed: int = 0
+    d_model: int = 128
+    layers: int = 4
+    vocab_size: int = 512
+
+
+class BatchedServer:
+    def __init__(self, sc: ServeConfig):
+        self.sc = sc
+        cfg = reduced(CFG.get(sc.arch), layers=sc.layers, d_model=sc.d_model,
+                      heads=max(4, sc.d_model // 32), ff=sc.d_model * 4,
+                      vocab=sc.vocab_size)
+        self.cfg = dataclasses.replace(cfg, dtype="float32")
+        self.params = init_params(self.cfg, jax.random.PRNGKey(sc.seed))
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(p, c, self.cfg, t))
+
+    def generate(self, prompts: List[List[int]], num_tokens: int,
+                 greedy: bool = False) -> np.ndarray:
+        sc, cfg = self.sc, self.cfg
+        b = len(prompts)
+        assert b <= sc.batch
+        max_prompt = max(len(p) for p in prompts)
+        cache = init_cache(cfg, b, sc.max_len)
+        key = jax.random.PRNGKey(sc.seed + 1)
+        # synchronized prefill via repeated decode steps (right-aligned pads)
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, max_prompt - len(p):] = p
+        logits = None
+        for t in range(max_prompt):
+            logits, cache = self._step(self.params, cache,
+                                       jnp.asarray(toks[:, t:t + 1]))
+        out = np.zeros((b, num_tokens), np.int32)
+        cur = None
+        for t in range(num_tokens):
+            lg = logits[:, 0, :cfg.vocab_size]
+            if greedy:
+                cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(sub, lg / sc.temperature).astype(jnp.int32)
+            out[:, t] = np.asarray(cur)
+            logits, cache = self._step(self.params, cache, cur[:, None])
+        return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+    sc = ServeConfig(arch=args.arch, batch=args.batch)
+    server = BatchedServer(sc)
+    prompts = [[1, 2, 3], [4, 5], [6], [7, 8, 9, 10]][: args.batch]
+    t0 = time.time()
+    out = server.generate(prompts, args.tokens)
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.tokens / dt:.1f} tok/s)")
+    print(out[:, :16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns the train-batch (or decode-step) abstract
+inputs — weak-type-correct, shardable, zero allocation. Modality frontends
+(EnCodec frames / ViT patches) are STUBS: embeddings-mode archs get
+precomputed [B, S, d_model] activations per the assignment brief.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.input_mode == "tokens":
+            inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+        return {"inputs": inputs}
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    batch: Dict[str, Any] = {
+        "inputs": inputs,
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    return batch

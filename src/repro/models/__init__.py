@@ -1,0 +1,12 @@
+"""Assigned architecture pool: model definitions in pure JAX."""
+from .config import ModelConfig, ShapeConfig, SHAPES, reduced
+from .model import (
+    init_params, forward, loss_fn, init_cache, decode_step,
+    params_logical_axes, cache_logical_axes, build_plan, layer_sigs,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "reduced",
+    "init_params", "forward", "loss_fn", "init_cache", "decode_step",
+    "params_logical_axes", "cache_logical_axes", "build_plan", "layer_sigs",
+]

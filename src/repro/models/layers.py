@@ -1,0 +1,469 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, attention (GQA/MQA,
+qk-norm, sliding-window, MLA with absorbed decode), gated MLP, and MoE with
+sort-based capacity dispatch.
+
+Everything is functional: ``init_*`` returns ``(params, axes)`` where ``axes``
+mirrors the params tree with logical-axis tuples consumed by
+``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard_as
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale_dim, dtype):
+    return (jax.random.normal(key, shape) / math.sqrt(scale_dim)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> Tuple[jax.Array, Tuple]:
+    return jnp.zeros((d,), dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions: [...] int -> cos/sin [..., head_dim//2] (float32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]):
+    """M-RoPE (qwen2-vl): positions [..., 3] (t,h,w); per-section frequencies.
+
+    Text-only stub feeds identical t=h=w positions, which reduces to 1D RoPE
+    (the qwen2-vl property).
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section s of the half-dim uses positions[..., s]
+    sec_id = jnp.zeros((half,), jnp.int32)
+    off = 0
+    for i, s in enumerate(sections):
+        sec_id = sec_id.at[off:off + s].set(i)
+        off += s
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)
+    ang = pos * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, ..., D]; cos/sin: [B, S, D/2] — rotate-half convention."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    while cos.ndim < x.ndim:
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def positions_cos_sin(cfg: ModelConfig, positions: jax.Array, head_dim: int):
+    if cfg.rope_kind == "mrope":
+        if positions.ndim == 2:  # text stub: same position per section
+            positions = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        return mrope_cos_sin(positions, head_dim, cfg.rope_theta, cfg.mrope_sections)
+    return rope_cos_sin(positions, head_dim, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA) with chunked-flash prefill & cached decode
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": _init(ks[0], (d, h, hd), d, dt),
+        "wk": _init(ks[1], (d, kv, hd), d, dt),
+        "wv": _init(ks[2], (d, kv, hd), d, dt),
+        "wo": _init(ks[3], (h, hd, d), h * hd, dt),
+    }
+    ax: Params = {
+        "wq": ("embed_fsdp", "heads", "head_dim_tp"),
+        "wk": ("embed_fsdp", "kv_heads", "head_dim_tp"),
+        "wv": ("embed_fsdp", "kv_heads", "head_dim_tp"),
+        "wo": ("heads", "head_dim_tp", "embed_fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"], ax["q_norm"] = jnp.zeros((hd,), dt), ("head_dim",)
+        p["k_norm"], ax["k_norm"] = jnp.zeros((hd,), dt), ("head_dim",)
+    return p, ax
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dkq->bskq", x, p["wk"])
+    v = jnp.einsum("bsd,dkq->bskq", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = positions_cos_sin(cfg, positions, cfg.head_dim)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             window: int = 0, chunk_q: int = 2048,
+                             chunk_kv: int = 2048) -> jax.Array:
+    """Flash-style two-level scan: O(chunk_q·chunk_kv) live scores.
+
+    q: [B,S,H,D], k/v: [B,S,K,D] (K | H). Causal; optional sliding window.
+    """
+    b, s, h, d = q.shape
+    dv = v.shape[-1]
+    kheads = k.shape[2]
+    g = h // kheads
+    scale = 1.0 / math.sqrt(d)
+    chunk_q = min(chunk_q, s)
+    chunk_kv = min(chunk_kv, s)
+    nq, nkv = s // chunk_q, s // chunk_kv
+    qg = q.reshape(b, s, kheads, g, d)
+
+    def q_block(qi):
+        q_blk = lax.dynamic_slice_in_dim(qg, qi * chunk_q, chunk_q, axis=1)
+        q_pos = qi * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = lax.dynamic_slice_in_dim(k, kj * chunk_kv, chunk_kv, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, kj * chunk_kv, chunk_kv, axis=1)
+            kv_pos = kj * chunk_kv + jnp.arange(chunk_kv)
+            s_blk = jnp.einsum("bqkgd,bckd->bkgqc", q_blk, k_blk).astype(jnp.float32) * scale
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+            p_blk = jnp.exp(s_blk - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p_blk, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p_blk, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kheads, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kheads, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kheads, g, chunk_q, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # [b, kheads, g, chunk_q, d]
+
+    # Recompute score blocks in the backward pass instead of stacking them
+    # as scan residuals: a [B,H,chunk_q,chunk_kv] f32 probability block per
+    # kv-step dominates HBM traffic otherwise (flash-attention semantics;
+    # see EXPERIMENTS.md §Perf deepseek iteration 3).
+    q_block = jax.checkpoint(q_block)
+
+    if nq == 1:
+        out = q_block(0)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, dv)
+        return out.astype(q.dtype)
+
+    _, outs = lax.scan(lambda c, qi: (c, q_block(qi)), 0, jnp.arange(nq))
+    # outs: [nq, b, kheads, g, chunk_q, dv] -> [b, s, h, dv]
+    out = jnp.moveaxis(outs, 0, 3)                # b,kheads,g,nq,chunk_q,dv
+    out = out.reshape(b, kheads, g, s, dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+def attention_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, *, chunk_q: int = 2048,
+                  chunk_kv: int = 2048) -> jax.Array:
+    """Training / prefill self-attention."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    k = shard_as(k, "batch", "seq", "kv_heads", None)
+    v = shard_as(v, "batch", "seq", "kv_heads", None)
+    out = chunked_causal_attention(q, k, v, window=cfg.sliding_window,
+                                   chunk_q=chunk_q, chunk_kv=chunk_kv)
+    return jnp.einsum("bshq,hqd->bsd", out, p["wo"])
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """KV cache for one layer. Sliding-window archs keep a ring buffer."""
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, length, kv, hd)
+    axes = ("batch", "decode_cache_seq", "kv_heads", None)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}, \
+           {"k": axes, "v": axes}
+
+
+def attention_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+                     pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """One-token decode step. x: [B, 1, d]; pos: scalar int32 (synchronized
+    batch decode). Ring-buffered when sliding_window is set."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k, v = _qkv(p, x, cfg, positions)
+    length = cache["k"].shape[1]
+    slot = pos % length if cfg.sliding_window else pos
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    kheads = cfg.num_kv_heads
+    g = cfg.num_heads // kheads
+    qg = q.reshape(b, 1, kheads, g, cfg.head_dim)
+    s_all = jnp.einsum("bqkgd,bckd->bkgqc", qg, ck).astype(jnp.float32)
+    s_all *= 1.0 / math.sqrt(cfg.head_dim)
+    idx = jnp.arange(length)
+    if cfg.sliding_window:
+        age = (slot - idx) % length
+        mask = age <= jnp.minimum(pos, length - 1)
+    else:
+        mask = idx <= pos
+    s_all = jnp.where(mask[None, None, None, None, :], s_all, NEG_INF)
+    w = jax.nn.softmax(s_all, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", w, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    y = jnp.einsum("bshq,hqd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank q/kv compression, absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wdq": _init(ks[0], (d, qr), d, dt),
+        "q_norm": jnp.zeros((qr,), dt),
+        "wuq": _init(ks[1], (qr, h, nd + rd), qr, dt),
+        "wdkv": _init(ks[2], (d, kr + rd), d, dt),
+        "kv_norm": jnp.zeros((kr,), dt),
+        "wuk": _init(ks[3], (kr, h, nd), kr, dt),
+        "wuv": _init(ks[4], (kr, h, vd), kr, dt),
+        "wo": _init(ks[5], (h, vd, d), h * vd, dt),
+    }
+    ax = {
+        "wdq": ("embed_fsdp", "q_lora"),
+        "q_norm": ("q_lora",),
+        "wuq": ("q_lora", "heads", None),
+        "wdkv": ("embed_fsdp", "kv_lora"),
+        "kv_norm": ("kv_lora",),
+        "wuk": ("kv_lora", "heads", None),
+        "wuv": ("kv_lora", "heads", None),
+        "wo": ("heads", None, "embed_fsdp"),
+    }
+    return p, ax
+
+
+def _mla_qkv_compressed(p: Params, x: jax.Array, cfg: ModelConfig,
+                        positions: jax.Array):
+    """Returns (q_nope, q_rope, c_kv, k_rope)."""
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    kr = cfg.kv_lora_rank
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhq->bshq", cq, p["wuq"])
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    c_kv = rms_norm(dkv[..., :kr], p["kv_norm"], cfg.norm_eps)
+    k_rope = dkv[..., kr:]
+    cos, sin = positions_cos_sin(cfg, positions, rd)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+            *, chunk_q: int = 2048, chunk_kv: int = 2048) -> jax.Array:
+    """Training / prefill: expand k/v per head and run chunked attention."""
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_compressed(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["wuk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, p["wuv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (cfg.qk_rope_head_dim,))],
+        axis=-1)
+    out = chunked_causal_attention(q, k, v, window=0, chunk_q=chunk_q, chunk_kv=chunk_kv)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    kr, rd = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    return ({"ckv": jnp.zeros((batch, max_len, kr), dtype),
+             "krope": jnp.zeros((batch, max_len, rd), dtype)},
+            {"ckv": ("batch", "decode_cache_seq", None),
+             "krope": ("batch", "decode_cache_seq", None)})
+
+
+def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+               pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """Absorbed-matrix MLA decode: attention runs entirely in the compressed
+    kv space — W_uk is folded into the query, W_uv into the output."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_compressed(p, x, cfg, positions)
+    ckv = lax.dynamic_update_slice_in_dim(cache["ckv"], c_kv, pos, axis=1)
+    krp = lax.dynamic_update_slice_in_dim(cache["krope"], k_rope, pos, axis=1)
+    # absorb: q' = q_nope @ W_uk -> [b,1,h,kr]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, p["wuk"])
+    s_c = jnp.einsum("bshr,bcr->bhsc", q_abs, ckv)
+    s_r = jnp.einsum("bshr,bcr->bhsc", q_rope, krp)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    scores = (s_c + s_r).astype(jnp.float32) * scale
+    mask = jnp.arange(ckv.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhsc,bcr->bshr", w, ckv.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, p["wuv"])
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, {"ckv": ckv, "krope": krp}
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"wi_gate": _init(ks[0], (d, ff), d, dt),
+         "wi_up": _init(ks[1], (d, ff), d, dt),
+         "wo": _init(ks[2], (ff, d), ff, dt)}
+    ax = {"wi_gate": ("embed_fsdp", "ff"), "wi_up": ("embed_fsdp", "ff"),
+          "wo": ("ff", "embed_fsdp")}
+    return p, ax
+
+
+def _act(cfg: ModelConfig):
+    return jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+
+
+def mlp_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = _act(cfg)(jnp.einsum("bsd,df->bsf", x, p["wi_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    h = shard_as(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing, sort-based capacity dispatch, optional shared experts
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    d, e, ff = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": _init(ks[0], (d, e), d, jnp.float32),
+        "wi_gate": _init(ks[1], (e, d, ff), d, dt),
+        "wi_up": _init(ks[2], (e, d, ff), d, dt),
+        "wo": _init(ks[3], (e, ff, d), ff, dt),
+    }
+    ax: Params = {
+        "router": ("embed", None),
+        "wi_gate": ("expert", "embed_fsdp", "ff"),
+        "wi_up": ("expert", "embed_fsdp", "ff"),
+        "wo": ("expert", "ff", "embed_fsdp"),
+    }
+    if cfg.moe_shared_experts:
+        sp, sax = init_mlp(cfg, ks[4], d_ff=cfg.moe_d_ff * cfg.moe_shared_experts)
+        p["shared"], ax["shared"] = sp, sax
+    return p, ax
+
+
+def moe_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    cap = int(math.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(cap, 1)
+
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, k)                      # [t, k]
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # sort-based rank-within-expert (dropless up to capacity)
+    e_flat = idx.reshape(t * k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = jnp.take(e_flat, order)
+    ones = jnp.ones_like(e_sorted, jnp.int32)
+    counts = jax.ops.segment_sum(ones, e_sorted, num_segments=e)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - jnp.take(starts, e_sorted)
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted)
+
+    keep = rank < cap
+    dest = jnp.where(keep, e_flat * cap + rank, e * cap)   # drop slot at the end
+    tok_of = jnp.arange(t * k, dtype=jnp.int32) // k
+
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buf = buf.at[dest].add(jnp.take(xt, tok_of, axis=0))
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = shard_as(buf, "expert", "moe_capacity", None)
+
+    h = _act(cfg)(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_buf = shard_as(out_buf, "expert", "moe_capacity", None)
+
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(e * cap, d), jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    y_assign = jnp.take(flat_out, dest, axis=0)            # [t*k, d]
+    y = jnp.sum(y_assign.reshape(t, k, d)
+                * gates.astype(y_assign.dtype)[..., None], axis=1)
+    if cfg.moe_shared_experts:
+        y = y + mlp_fwd(p["shared"], x, cfg).reshape(t, d)
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (fraction × probability)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = lax.top_k(probs, cfg.moe_top_k)
+    e = cfg.moe_num_experts
+    frac = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac * imp)

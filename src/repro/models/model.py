@@ -1,0 +1,394 @@
+"""Model assembly: stacked-parameter scan-over-layers, heterogeneous block
+planning (dense/MoE prefixes, hybrid periods), train loss and cached decode.
+
+Layers are grouped into homogeneous *blocks* so `lax.scan` keeps the HLO size
+O(1) in depth (MaxText-style):
+
+  * dense/MoE uniform stacks -> one scan each (deepseek: 3 dense + 58 MoE)
+  * jamba's (attn + 7×ssm, alternating MoE) period -> scan over 9 periods
+    whose body unrolls the 8 sublayers
+
+Params are nested dicts. Logical sharding axes come from the *axes twins*
+(`params_logical_axes` / `cache_logical_axes`) which never materialize
+arrays, so the 671B dry-run can build shardings from `jax.eval_shape` alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard_as
+from . import layers as L
+from . import ssm as SSM
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+LayerSig = Tuple[str, str]  # (mixer_kind, ffn_kind)
+
+
+# ---------------------------------------------------------------------------
+# Block planning
+# ---------------------------------------------------------------------------
+
+def layer_sigs(cfg: ModelConfig) -> List[LayerSig]:
+    sigs = []
+    for li in range(cfg.num_layers):
+        if cfg.layer_pattern:
+            mixer = cfg.layer_pattern[li % len(cfg.layer_pattern)]
+        elif cfg.ssm:
+            mixer = "ssm"
+        elif cfg.mla:
+            mixer = "mla"
+        else:
+            mixer = "attn"
+        if cfg.ssm and not cfg.layer_pattern:
+            ffn = "none"  # pure mamba block has no separate FFN
+        elif (cfg.moe_num_experts > 0 and li >= cfg.moe_layer_start
+              and (li - cfg.moe_layer_start) % cfg.moe_every == 0):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        sigs.append((mixer, ffn))
+    return sigs
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    sigs: Tuple[LayerSig, ...]   # sublayers unrolled inside the scan body
+    repeat: int                  # scan length
+
+
+def build_plan(cfg: ModelConfig) -> List[Block]:
+    sigs = layer_sigs(cfg)
+    n = len(sigs)
+    runs: List[Tuple[LayerSig, int]] = []
+    for s in sigs:
+        if runs and runs[-1][0] == s:
+            runs[-1] = (s, runs[-1][1] + 1)
+        else:
+            runs.append((s, 1))
+    if len(runs) <= 4:
+        return [Block((s,), c) for s, c in runs]
+    for p in range(1, min(n, 16) + 1):
+        if n % p == 0 and all(sigs[i] == sigs[i % p] for i in range(n)):
+            return [Block(tuple(sigs[:p]), n // p)]
+    return [Block((s,), 1) for s in sigs]
+
+
+# ---------------------------------------------------------------------------
+# Sublayer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(cfg: ModelConfig, sig: LayerSig, key) -> Params:
+    mixer, ffn = sig
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {"ln1": L.init_rms_norm(cfg.d_model, dt)[0]}
+    if mixer == "attn":
+        p["mixer"] = L.init_attention(cfg, k1)[0]
+    elif mixer == "mla":
+        p["mixer"] = L.init_mla(cfg, k1)[0]
+    elif mixer == "ssm":
+        p["mixer"] = SSM.init_ssm(cfg, k1)[0]
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["ln2"] = L.init_rms_norm(cfg.d_model, dt)[0]
+        p["ffn"] = (L.init_moe(cfg, k2)[0] if ffn == "moe"
+                    else L.init_mlp(cfg, k2)[0])
+    return p
+
+
+def _sublayer_axes(cfg: ModelConfig, sig: LayerSig) -> Params:
+    mixer, ffn = sig
+    ax: Params = {"ln1": ("embed",)}
+    if mixer == "attn":
+        ax["mixer"] = {
+            "wq": ("embed_fsdp", "heads", "head_dim_tp"),
+            "wk": ("embed_fsdp", "kv_heads", "head_dim_tp"),
+            "wv": ("embed_fsdp", "kv_heads", "head_dim_tp"),
+            "wo": ("heads", "head_dim_tp", "embed_fsdp"),
+        }
+        if cfg.qk_norm:
+            ax["mixer"]["q_norm"] = ("head_dim",)
+            ax["mixer"]["k_norm"] = ("head_dim",)
+    elif mixer == "mla":
+        ax["mixer"] = {
+            "wdq": ("embed_fsdp", "q_lora"), "q_norm": ("q_lora",),
+            "wuq": ("q_lora", "heads", None),
+            "wdkv": ("embed_fsdp", "kv_lora"), "kv_norm": ("kv_lora",),
+            "wuk": ("kv_lora", "heads", None), "wuv": ("kv_lora", "heads", None),
+            "wo": ("heads", None, "embed_fsdp"),
+        }
+    else:
+        ax["mixer"] = {
+            "z_proj": ("embed_fsdp", "ssm_inner"),
+            "x_proj": ("embed_fsdp", "ssm_inner"),
+            "bc_proj": ("embed_fsdp", None),
+            "dt_proj": ("embed_fsdp", None),
+            "conv_wx": ("conv", "ssm_inner"), "conv_bx": ("ssm_inner",),
+            "conv_wbc": ("conv", None), "conv_bbc": (None,),
+            "a_log": (None,), "d_skip": (None,),
+            "dt_bias": (None,), "norm": ("ssm_inner",),
+            "out_proj": ("ssm_inner", "embed_fsdp"),
+        }
+    if ffn != "none":
+        ax["ln2"] = ("embed",)
+        if ffn == "moe":
+            ax["ffn"] = {
+                "router": ("embed", None),
+                "wi_gate": ("expert", "embed_fsdp", "ff"),
+                "wi_up": ("expert", "embed_fsdp", "ff"),
+                "wo": ("expert", "ff", "embed_fsdp"),
+            }
+            if cfg.moe_shared_experts:
+                ax["ffn"]["shared"] = {"wi_gate": ("embed_fsdp", "ff"),
+                                       "wi_up": ("embed_fsdp", "ff"),
+                                       "wo": ("ff", "embed_fsdp")}
+        else:
+            ax["ffn"] = {"wi_gate": ("embed_fsdp", "ff"),
+                         "wi_up": ("embed_fsdp", "ff"),
+                         "wo": ("ff", "embed_fsdp")}
+    return ax
+
+
+def _apply_sublayer(cfg: ModelConfig, sig: LayerSig, p: Params, x: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+    mixer, ffn = sig
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        h = L.attention_fwd(p["mixer"], h, cfg, positions)
+    elif mixer == "mla":
+        h = L.mla_fwd(p["mixer"], h, cfg, positions)
+    else:
+        h = SSM.ssm_fwd(p["mixer"], h, cfg)
+    x = x + h
+    if ffn != "none":
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            h2 = _moe(p["ffn"], h2, cfg)
+        else:
+            h2 = L.mlp_fwd(p["ffn"], h2, cfg)
+        x = x + h2
+    return shard_as(x, "batch", "seq", "embed_act")
+
+
+def _moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.moe_impl == "ep":
+        from .moe_ep import moe_fwd_ep
+        return moe_fwd_ep(p, x, cfg)
+    return L.moe_fwd(p, x, cfg)
+
+
+def _decode_sublayer(cfg: ModelConfig, sig: LayerSig, p: Params, cache: Params,
+                     x: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Params]:
+    mixer, ffn = sig
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        h, new_cache = L.attention_decode(p["mixer"], h, cache, cfg, pos)
+    elif mixer == "mla":
+        h, new_cache = L.mla_decode(p["mixer"], h, cache, cfg, pos)
+    else:
+        h, new_cache = SSM.ssm_decode(p["mixer"], h, cache, cfg, pos)
+    x = x + h
+    if ffn != "none":
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            h2 = _moe(p["ffn"], h2, cfg)
+        else:
+            h2 = L.mlp_fwd(p["ffn"], h2, cfg)
+        x = x + h2
+    return x, new_cache
+
+
+def _init_sublayer_cache(cfg: ModelConfig, sig: LayerSig, batch: int,
+                         max_len: int, dtype) -> Params:
+    mixer, _ = sig
+    if mixer == "attn":
+        return L.init_attention_cache(cfg, batch, max_len, dtype)[0]
+    if mixer == "mla":
+        return L.init_mla_cache(cfg, batch, max_len, dtype)[0]
+    return SSM.init_ssm_cache(cfg, batch, dtype)[0]
+
+
+def _sublayer_cache_axes(cfg: ModelConfig, sig: LayerSig) -> Params:
+    mixer, _ = sig
+    if mixer == "attn":
+        axes = ("batch", "decode_cache_seq", "kv_heads", None)
+        return {"k": axes, "v": axes}
+    if mixer == "mla":
+        return {"ckv": ("batch", "decode_cache_seq", None),
+                "krope": ("batch", "decode_cache_seq", None)}
+    return {"conv_x": ("batch", None, "ssm_inner"),
+            "conv_bc": ("batch", None, None),
+            "state": ("batch", None, None, None)}
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 3)
+    p: Params = {}
+    if cfg.input_mode == "tokens":
+        p["embed"] = (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model))
+                      * 0.02).astype(dt)
+    blocks_p = []
+    for bi, blk in enumerate(plan):
+        slot_keys = jax.random.split(keys[1 + bi], blk.repeat * len(blk.sigs)
+                                     ).reshape(blk.repeat, len(blk.sigs), 2)
+        slots_p = []
+        for si, sig in enumerate(blk.sigs):
+            sp = jax.vmap(lambda k, s=sig: _init_sublayer(cfg, s, k))(slot_keys[:, si])
+            slots_p.append(sp)
+        blocks_p.append(slots_p)
+    p["blocks"] = blocks_p
+    p["final_norm"] = L.init_rms_norm(cfg.d_model, dt)[0]
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(keys[-1], (cfg.d_model, cfg.padded_vocab))
+                     * 0.02).astype(dt)
+    return p
+
+
+def params_logical_axes(cfg: ModelConfig) -> Params:
+    plan = build_plan(cfg)
+    ax: Params = {}
+    if cfg.input_mode == "tokens":
+        ax["embed"] = ("vocab", "embed")
+    ax["blocks"] = [
+        [jax.tree.map(lambda t: ("layers",) + t, _sublayer_axes(cfg, sig),
+                      is_leaf=_is_axes_leaf) for sig in blk.sigs]
+        for blk in plan]
+    ax["final_norm"] = ("embed",)
+    if not cfg.tie_embeddings:
+        ax["head"] = ("embed", "vocab")
+    return ax
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def forward(params: Params, cfg: ModelConfig, inputs: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    """inputs: int tokens [B,S] or embeddings [B,S,d]. Returns logits [B,S,V]."""
+    plan = build_plan(cfg)
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    b, s = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard_as(x, "batch", "seq", "embed_act")
+
+    for blk, slots in zip(plan, params["blocks"]):
+        def body(carry, slot_params, blk=blk):
+            for sig, sp in zip(blk.sigs, slot_params):
+                carry = _apply_sublayer(cfg, sig, sp, carry, positions)
+            return carry, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        if blk.repeat == 1:
+            x, _ = body_fn(x, [jax.tree.map(lambda a: a[0], sp) for sp in slots])
+        else:
+            x, _ = lax.scan(body_fn, x, tuple(slots))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_head(params, cfg, x)
+
+
+def _lm_head(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Logits over the padded vocab; pad region masked to -1e30."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    logits = shard_as(logits, "batch", "seq", "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Causal LM cross-entropy (mean over tokens) + small z-loss.
+
+    Written vocab-shard-friendly: no take_along_axis gather over the (model-
+    sharded) vocab dim — the gold logit comes from a masked reduction, so
+    GSPMD keeps logits sharded and only psums [B,S] stats.
+    """
+    logits = forward(params, cfg, batch["inputs"], batch.get("positions"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # stable logsumexp over the (possibly sharded) vocab axis
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    ce = jnp.mean(logz - gold)
+    zloss = 1e-4 * jnp.mean(jnp.square(logz))
+    return ce + zloss
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    plan = build_plan(cfg)
+    caches = []
+    for blk in plan:
+        slots_c = []
+        for sig in blk.sigs:
+            c = _init_sublayer_cache(cfg, sig, batch, max_len, dt)
+            c = jax.tree.map(
+                lambda a: jnp.zeros((blk.repeat,) + a.shape, a.dtype), c)
+            slots_c.append(c)
+        caches.append(slots_c)
+    return {"blocks": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Params:
+    plan = build_plan(cfg)
+    axes = [[jax.tree.map(lambda t: ("layers",) + t, _sublayer_cache_axes(cfg, sig),
+                          is_leaf=_is_axes_leaf) for sig in blk.sigs]
+            for blk in plan]
+    return {"blocks": axes, "pos": ()}
+
+
+def decode_step(params: Params, cache: Params, cfg: ModelConfig,
+                inputs: jax.Array) -> Tuple[jax.Array, Params]:
+    """One synchronized decode step. inputs: [B,1] tokens or [B,1,d] embeds."""
+    plan = build_plan(cfg)
+    pos = cache["pos"]
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    x = shard_as(x, "batch", None, "embed_act")
+
+    new_blocks = []
+    for blk, slots, cslots in zip(plan, params["blocks"], cache["blocks"]):
+        def body(carry, xs, blk=blk):
+            slot_params, slot_caches = xs
+            new_caches = []
+            for sig, sp, sc in zip(blk.sigs, slot_params, slot_caches):
+                carry, nc = _decode_sublayer(cfg, sig, sp, sc, carry, pos)
+                new_caches.append(nc)
+            return carry, new_caches
+
+        if blk.repeat == 1:
+            sp0 = [jax.tree.map(lambda a: a[0], sp) for sp in slots]
+            sc0 = [jax.tree.map(lambda a: a[0], sc) for sc in cslots]
+            x, ncs = body(x, (sp0, sc0))
+            ncs = [jax.tree.map(lambda a: a[None], nc) for nc in ncs]
+        else:
+            x, ncs = lax.scan(body, x, (tuple(slots), tuple(cslots)))
+        new_blocks.append(list(ncs))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits, {"blocks": new_blocks, "pos": pos + 1}

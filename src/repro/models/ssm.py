@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060: within a chunk of length Q
+the recurrence is evaluated as a (masked, decay-weighted) attention-like
+quadratic form; across chunks a linear recurrence carries the [H, P, N]
+state. Chunks are processed with `lax.scan` so live memory is O(B·H·Q²)
+regardless of sequence length, and the decode path is the exact single-step
+recurrence (O(1) state — this is why mamba2/jamba run the 500k-context
+decode cell).
+
+Single group (ngroups=1): B/C projections are shared across heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import _init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def init_ssm(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    convw = cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    # Fully shard-aligned projections (mathematically identical to the fused
+    # in_proj): z / x / BC / dt each get their own matrix so no sharded slice
+    # boundary ever crosses a shard — the fused baseline paid 40+ GB/device
+    # of collective-permute resharding per step for exactly this
+    # (EXPERIMENTS.md §Perf mamba iteration 1). The depthwise conv splits
+    # the same way (per-channel, so splitting is exact).
+    p: Params = {
+        "z_proj": _init(ks[0], (d, di), d, dt),
+        "x_proj": _init(ks[3], (d, di), d, dt),
+        "bc_proj": _init(ks[1], (d, 2 * n), d, dt),
+        "dt_proj": _init(ks[2], (d, h), d, dt),
+        "conv_wx": _init(ks[0], (convw, di), convw, dt),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_wbc": _init(ks[1], (convw, 2 * n), convw, dt),
+        "conv_bbc": jnp.zeros((2 * n,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": _init(ks[2], (di, d), di, dt),
+    }
+    ax: Params = {
+        "z_proj": ("embed_fsdp", "ssm_inner"),
+        "x_proj": ("embed_fsdp", "ssm_inner"),
+        "bc_proj": ("embed_fsdp", None),
+        "dt_proj": ("embed_fsdp", None),
+        "conv_wx": ("conv", "ssm_inner"),
+        "conv_bx": ("ssm_inner",),
+        "conv_wbc": ("conv", None),
+        "conv_bbc": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed_fsdp"),
+    }
+    return p, ax
+
+
+def _project(p: Params, x: jax.Array):
+    z = jnp.einsum("bsd,de->bse", x, p["z_proj"])
+    xc = jnp.einsum("bsd,de->bse", x, p["x_proj"])
+    bc = jnp.einsum("bsd,de->bse", x, p["bc_proj"])
+    dt = jnp.einsum("bsd,de->bse", x, p["dt_proj"])
+    return z, xc, bc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssm_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training / prefill path. x: [B, S, d] with S % ssm_chunk == 0."""
+    bsz, s, _ = x.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    nc = s // q
+
+    z, xc, bc, dt_raw = _project(p, x)
+    xc = _causal_conv(xc, p["conv_wx"], p["conv_bx"])
+    bc = _causal_conv(bc, p["conv_wbc"], p["conv_bbc"])
+    # bf16 operands for the quadratic forms (2x HBM traffic saved; the decay
+    # math — dt, cumsums, state carry — stays fp32 for stability):
+    xs = xc.reshape(bsz, s, h, hp)
+    bmat = bc[..., :n]
+    cmat = bc[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                             # [H]
+
+    # chunk
+    xs_c = xs.reshape(bsz, nc, q, h, hp)
+    b_c = bmat.reshape(bsz, nc, q, n)
+    c_c = cmat.reshape(bsz, nc, q, n)
+    dt_c = dt.reshape(bsz, nc, q, h)
+    da_c = dt_c * a                                                      # [B,nc,Q,H]
+    cs = jnp.cumsum(da_c, axis=2)                                        # inclusive
+
+    def chunk_step(state, inp):
+        xs_i, b_i, c_i, dt_i, cs_i = inp                                 # [B,Q,...]
+        # intra-chunk (masked quadratic form); decay in f32, dots accumulate
+        # in f32 from bf16 operands
+        li = jnp.exp(cs_i[:, :, None, :] - cs_i[:, None, :, :])          # [B,Q,Q,H]
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        li = jnp.where(tri[None, :, :, None], li, 0.0)
+        scores = jnp.einsum("bin,bjn->bij", c_i, b_i,
+                            preferred_element_type=jnp.float32)          # [B,Q,Q]
+        wmat = scores[..., None] * li * dt_i[:, None, :, :]              # [B,Q,Q,H]
+        intra = jnp.einsum("bijh,bjhp->bihp", wmat.astype(xs_i.dtype), xs_i,
+                           preferred_element_type=jnp.float32)
+        # inter-chunk (carry-in state read at every position)
+        inter = jnp.einsum("bin,bhpn,bih->bihp", c_i.astype(jnp.float32),
+                           state, jnp.exp(cs_i))
+        y_i = intra + inter
+        # update carried state
+        decay_out = jnp.exp(cs_i[:, -1:, :] - cs_i)                      # [B,Q,H]
+        s_chunk = jnp.einsum("bjn,bjh,bjhp->bhpn", b_i.astype(jnp.float32),
+                             decay_out * dt_i, xs_i.astype(jnp.float32))
+        state = state * jnp.exp(cs_i[:, -1, :])[..., None, None] + s_chunk
+        return state, y_i
+
+    state0 = jnp.zeros((bsz, h, hp, n), jnp.float32)
+    xs_t = jnp.moveaxis(xs_c, 1, 0)
+    _, ys = lax.scan(chunk_step, state0,
+                     (xs_t, jnp.moveaxis(b_c, 1, 0), jnp.moveaxis(c_c, 1, 0),
+                      jnp.moveaxis(dt_c, 1, 0), jnp.moveaxis(cs, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, hp)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    di, n, h, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cache = {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * n), dtype),
+        "state": jnp.zeros((batch, h, hp, n), jnp.float32),
+    }
+    axes = {
+        "conv_x": ("batch", None, "ssm_inner"),
+        "conv_bc": ("batch", None, None),
+        "state": ("batch", None, None, None),
+    }
+    return cache, axes
+
+
+def ssm_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+               pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """Single-token recurrence. x: [B, 1, d]."""
+    del pos  # SSM state is position-free
+    bsz = x.shape[0]
+    di, n, h, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xc_raw, bc_raw, dt_raw = _project(p, x)
+    win_x = jnp.concatenate([cache["conv_x"], xc_raw], axis=1)           # [B,K,di]
+    win_bc = jnp.concatenate([cache["conv_bc"], bc_raw], axis=1)         # [B,K,2n]
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x, p["conv_wx"]) + p["conv_bx"])
+    bcv = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc, p["conv_wbc"]) + p["conv_bbc"])
+    xs = xc.reshape(bsz, h, hp).astype(jnp.float32)
+    bmat = bcv[:, :n].astype(jnp.float32)
+    cmat = bcv[:, n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                                  # [B,H]
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", bmat, dt, xs)
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state) + p["d_skip"][None, :, None] * xs
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_cache = {"conv_x": win_x[:, 1:, :], "conv_bc": win_bc[:, 1:, :],
+                 "state": state}
+    return out, new_cache

@@ -1,0 +1,6 @@
+from .adamw import AdamW
+from .adafactor import Adafactor
+from .schedule import cosine_warmup
+from .compress import error_feedback_compress
+
+__all__ = ["AdamW", "Adafactor", "cosine_warmup", "error_feedback_compress"]

@@ -1,0 +1,89 @@
+"""Adafactor (factored second moments, optional momentum-free mode).
+
+The optimizer-state footprint for a 671B-param model drops from 2×N fp32
+(AdamW) to ~N/r + N/c (row/col factors) — the difference between fitting and
+not fitting v5e HBM at 256 chips (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-2
+    decay: float = 0.8          # t^-decay second-moment decay schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+
+    def _factored(self, shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= self.min_dim_size_to_factor
+                and shape[-2] >= self.min_dim_size_to_factor)
+
+    def init(self, params):
+        def one(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)
+                                  or hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if "vr" in v:
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # standard adafactor preconditioner: V ≈ vr·vc / mean(vr)
+                mean_vr = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                denom = (jnp.sqrt(vr / mean_vr)[..., None]
+                         * jnp.sqrt(vc)[..., None, :] + self.eps)
+                precond = g / denom
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                precond = g * jax.lax.rsqrt(vv + self.eps)
+                new_v = {"v": vv}
+            # update clipping (RMS of update <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms / self.clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (precond + self.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_params, {"v": new_v, "step": step}
+
+    def state_logical_axes(self, params_axes, params_shapes):
+        """Axes tree for the optimizer state; `params_shapes` (eval_shape tree)
+        decides per-leaf whether the second moment is factored."""
+        def one(ax, shp):
+            if self._factored(shp.shape):
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+            return {"v": tuple(ax)}
+        return {"v": jax.tree.map(one, params_axes, params_shapes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "step": ()}

@@ -1,0 +1,85 @@
+"""AdamW with fp32 master weights for low-precision params.
+
+Self-contained (no optax). State is a pytree mirroring params, so the same
+logical-axis sharding applies to optimizer state (ZeRO-style: when params are
+FSDP-sharded over 'data', the moments shard identically for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    keep_master: bool = True   # fp32 master copy when params are bf16
+
+    def init(self, params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state = {"mu": zeros,
+                 "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self.keep_master:
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        grads = clip_by_global_norm(grads, self.grad_clip)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        base = state.get("master", params)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            return (p.astype(jnp.float32)
+                    - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                            + self.weight_decay * p.astype(jnp.float32)))
+
+        new_master = jax.tree.map(upd, base, mu, nu)
+        new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype), new_master, params)
+        new_state = {"mu": mu, "nu": nu, "step": step}
+        if self.keep_master:
+            new_state["master"] = new_master
+        return new_params, new_state
+
+    def state_logical_axes(self, params_axes, params_shapes=None):
+        del params_shapes
+        ax = {"mu": params_axes, "nu": params_axes, "step": ()}
+        if self.keep_master:
+            ax["master"] = params_axes
+        return ax
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    if not max_norm:
+        return tree
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree)

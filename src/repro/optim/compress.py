@@ -1,0 +1,46 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 uniform quantization with a persistent error-feedback accumulator: the
+quantization residual is carried to the next step, so the compressed update
+is unbiased *over time* (Seide et al. / EF-SGD). On a real multi-pod
+deployment this wraps the **cross-pod** all-reduce — intra-pod reduction
+stays fp32 over fast ICI, only the slow pod-to-pod (DCN) hop moves int8
+(4× fewer bytes; see launch/train.py for the hook). Numerics are validated
+in tests/test_optim.py (compressed training tracks uncompressed).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_compress(grads, err_state):
+    """Returns (decompressed grads, new error state).
+
+    err_state is a pytree like grads (fp32). Pass None to initialize.
+    """
+    if err_state is None:
+        err_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])

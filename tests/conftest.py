@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Make src/ importable without install; keep the default single CPU device
+# (the dry-run driver sets its own device count in a separate process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

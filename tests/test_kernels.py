@@ -1,0 +1,69 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("e,w", [(1, 2), (7, 2), (64, 16), (257, 30), (1000, 70)])
+def test_bf_intersect_pairs_sweep(e, w, rng):
+    a = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, size=(e, w), dtype=np.uint32))
+    np.testing.assert_array_equal(np.asarray(ops.bf_intersect_pairs(a, b)),
+                                  np.asarray(ref.bf_intersect_pairs(a, b)))
+
+
+@pytest.mark.parametrize("blocks", [(16, 8), (64, 64), (256, 512)])
+def test_bf_intersect_block_shapes(blocks, rng):
+    be, bw = blocks
+    a = jnp.asarray(rng.integers(0, 2**32, size=(100, 20), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, size=(100, 20), dtype=np.uint32))
+    out = ops.bf_intersect_pairs(a, b, block_e=be, block_w=bw)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.bf_intersect_pairs(a, b)))
+
+
+def test_bf_intersect3(rng):
+    a, b, c = (jnp.asarray(rng.integers(0, 2**32, size=(77, 12), dtype=np.uint32))
+               for _ in range(3))
+    np.testing.assert_array_equal(np.asarray(ops.bf_intersect3_pairs(a, b, c)),
+                                  np.asarray(ref.bf_intersect3_pairs(a, b, c)))
+
+
+@pytest.mark.parametrize("n,e,w", [(16, 40, 4), (100, 333, 18), (5, 9, 2)])
+def test_bf_edge_intersect_gather(n, e, w, rng):
+    bloom = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+    edges = jnp.asarray(rng.integers(0, n, size=(e, 2), dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(ops.bf_edge_intersect(bloom, edges)),
+                                  np.asarray(ref.bf_edge_intersect(bloom, edges)))
+
+
+def _dedup_rows(x, sentinel):
+    x = np.sort(x, axis=1)
+    d = np.concatenate([np.zeros((x.shape[0], 1), bool), x[:, 1:] == x[:, :-1]], axis=1)
+    return np.where(d, sentinel, x).astype(np.int32)
+
+
+@pytest.mark.parametrize("e,k", [(5, 4), (100, 16), (300, 33)])
+def test_mh_intersect_sweep(e, k, rng):
+    sent = 10_000
+    a = jnp.asarray(_dedup_rows(rng.choice(sent, size=(e, k)), sent))
+    b = jnp.asarray(_dedup_rows(rng.choice(sent, size=(e, k)), sent))
+    np.testing.assert_array_equal(np.asarray(ops.mh_intersect_pairs(a, b, sent)),
+                                  np.asarray(ref.mh_intersect_pairs(a, b, sent)))
+
+
+def test_khash_match(rng):
+    sent = 999
+    a = jnp.asarray(rng.integers(0, sent, size=(64, 8), dtype=np.int32))
+    b = jnp.asarray(np.where(rng.random((64, 8)) < 0.5, np.asarray(a), 7))
+    np.testing.assert_array_equal(np.asarray(ops.khash_match_pairs(a, b, sent)),
+                                  np.asarray(ref.khash_match_pairs(a, b, sent)))
+
+
+def test_kernel_against_known_popcounts():
+    a = jnp.asarray(np.array([[0xFFFFFFFF, 0x0], [0xF0F0F0F0, 0xFFFF0000]], np.uint32))
+    b = jnp.asarray(np.array([[0xFFFF0000, 0x0], [0xFFFFFFFF, 0x0000FFFF]], np.uint32))
+    out = np.asarray(ops.bf_intersect_pairs(a, b))
+    assert out.tolist() == [16, 16]

@@ -1,0 +1,88 @@
+"""Sketch construction: determinism, np/jax twins, membership semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G, sketches as S
+from repro.core.hashing import hash_u32, np_hash_u32
+
+
+def test_hash_np_jax_twins():
+    xs = np.arange(1000, dtype=np.uint32)
+    for seed in (0, 1, 12345):
+        a = np.asarray(hash_u32(jnp.asarray(xs), seed))
+        b = np_hash_u32(xs, seed)
+        assert np.array_equal(a, b)
+
+
+def test_hash_avalanche():
+    xs = np.arange(4096, dtype=np.uint32)
+    h = np_hash_u32(xs, 3)
+    # bit balance: each output bit ~50% set
+    bits = ((h[:, None] >> np.arange(32)[None, :]) & 1).mean(axis=0)
+    assert np.all(bits > 0.45) and np.all(bits < 0.55)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return G.erdos_renyi(300, 0.05, seed=7)
+
+
+def test_bloom_np_equals_jax(g):
+    for b in (1, 2, 4):
+        bf = S.build_bloom(g, words=8, num_hashes=b, seed=5)
+        bf_np = S.build_bloom_np(g, words=8, num_hashes=b, seed=5)
+        assert np.array_equal(np.asarray(bf), bf_np)
+
+
+def test_bloom_membership_no_false_negatives(g):
+    words, b, seed = 8, 2, 5
+    bf = S.build_bloom(g, words, b, seed)
+    total_bits = words * 32
+    for v in [0, 5, 77]:
+        nbrs = G.neighbors_np(g, v)
+        if len(nbrs) == 0:
+            continue
+        got = S.bloom_membership(bf[v], jnp.asarray(nbrs), g.n, b, total_bits, seed)
+        assert bool(np.all(np.asarray(got))), "bloom filters never have false negatives"
+
+
+def test_khash_elements_are_neighbors(g):
+    kh = np.asarray(S.build_khash(g, k=8, seed=3))
+    for v in [1, 10, 100]:
+        nbrs = set(G.neighbors_np(g, v).tolist())
+        elems = set(int(e) for e in kh[v] if e < g.n)
+        assert elems <= nbrs
+
+
+def test_1hash_sorted_and_unique(g):
+    oh = np.asarray(S.build_1hash(g, k=8, seed=3))
+    hs = np.asarray(S.onehash_values(jnp.asarray(oh), g.n, 3))
+    for v in range(0, g.n, 37):
+        row_h = hs[v][oh[v] < g.n]
+        assert np.all(np.diff(row_h.astype(np.int64)) >= 0)
+        valid = oh[v][oh[v] < g.n]
+        assert len(set(valid.tolist())) == len(valid)
+
+
+def test_kmv_sorted_unit_interval(g):
+    kv = np.asarray(S.build_kmv(g, k=8, seed=3))
+    valid = kv[kv < 1.5]
+    assert np.all(valid > 0) and np.all(valid <= 1.0)
+
+
+def test_budget_sizing():
+    n, m = 10_000, 200_000
+    w = S.bloom_words_for_budget(n, m, 0.25)
+    total_bits = n * w * 32
+    csr_bits = (2 * m + n + 1) * 32
+    assert total_bits <= 1.35 * 0.25 * csr_bits  # within rounding slack
+    k = S.minhash_k_for_budget(n, m, 0.25)
+    assert n * k <= 1.35 * 0.25 * (2 * m + n + 1)
+
+
+def test_pack_unpack_roundtrip(rng):
+    bits = jnp.asarray(rng.random((5, 96)) < 0.3)
+    packed = S.pack_bits(bits)
+    assert packed.dtype == jnp.uint32
+    assert np.array_equal(np.asarray(S.unpack_bits(packed)), np.asarray(bits))
