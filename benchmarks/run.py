@@ -3,18 +3,34 @@
 Prints ``name,us_per_call,derived`` CSV rows (see common.emit). Heavy
 roofline cells come from the dry-run artifacts (benchmarks.roofline), not
 recomputed here.
+
+``--smoke`` runs the fast subset (kernel micro + engine suites) — the
+nightly-CI sanity pass; ``--only NAME`` runs a single suite by name.
+
+Run as a module so relative imports resolve:
+  PYTHONPATH=src python -m benchmarks.run [--smoke | --only NAME]
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset only (nightly CI sanity pass)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="run a single suite by name")
+    args = ap.parse_args()
+
     from . import (accuracy_pairs, adaptive_bloom, algo_speedup, construction,
-                   heuristics, kernels_bench, roofline, scaling, tc_estimators)
+                   engine_bench, heuristics, kernels_bench, roofline, scaling,
+                   tc_estimators)
     suites = [
         ("kernels", kernels_bench.run),
+        ("engine", engine_bench.run),
         ("fig3_accuracy", accuracy_pairs.run),
         ("fig4-6_speedup", algo_speedup.run),
         ("table7_tc", tc_estimators.run),
@@ -24,6 +40,13 @@ def main() -> None:
         ("adaptive_bloom", adaptive_bloom.run),
         ("roofline", roofline.run),
     ]
+    smoke_suites = {"kernels", "engine"}
+    if args.only is not None:
+        suites = [s for s in suites if s[0] == args.only]
+        if not suites:
+            raise SystemExit(f"unknown suite {args.only!r}")
+    elif args.smoke:
+        suites = [s for s in suites if s[0] in smoke_suites]
     failed = []
     for name, fn in suites:
         print(f"# --- {name}", flush=True)

@@ -58,6 +58,16 @@ def main():
     jac = pair_similarity(g, pairs, "jaccard", pg_bf)
     print("Jaccard (BF):", [round(float(x), 3) for x in jac])
 
+    # 7) the batched mining engine: one sketch build + one per-edge pass
+    #    shared across TC, LCC and clustering (repro.engine.session)
+    from repro import engine
+    sess = engine.session(g, pg_bf)
+    tc_sess = float(sess.triangle_count())          # reuses the shared pass
+    lcc_mean = float(jnp.mean(sess.local_clustering()))
+    cc4 = float(sess.four_clique_count())
+    print(f"\nengine session: TC={tc_sess:.0f} mean-LCC={lcc_mean:.3f} "
+          f"4-cliques={cc4:.0f} (one sketch, one edge pass)")
+
 
 if __name__ == "__main__":
     main()

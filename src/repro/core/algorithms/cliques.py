@@ -17,6 +17,11 @@ excluded automatically: u ∉ N_u). Triple intersections:
 The closing test w∈N_u uses the BF membership query when a BF sketch is
 given (fully sketch-resident, like the paper's set-centric formulation) and
 an exact binary search otherwise.
+
+Chunking/padding is the engine's (``EnginePlan``); on the BF kernel path the
+per-chunk wedge triples flatten into one (u, v, w) list and the triple
+popcounts come from the 3-way block-gather Pallas kernel — identical integer
+popcounts to the jnp gather, so estimates are bit-identical.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ... import engine as eng
 from .. import estimators as est
 from ..graph import Graph
 from ..sketches import SketchSet, bloom_membership
@@ -32,12 +38,17 @@ from ..estimators import khash_jaccard, minhash_intersection
 
 
 def four_clique_count(graph: Graph, sketch: Optional[SketchSet] = None,
-                      edge_chunk: int = 1024, exact_closing_test: bool = False) -> jax.Array:
+                      plan: Optional[eng.EnginePlan] = None,
+                      exact_closing_test: bool = False, **kw) -> jax.Array:
     n, d_max = graph.n, graph.d_max
-    adj, deg, edges = graph.adj, graph.deg, graph.edges
-    m = edges.shape[0]
+    adj, deg = graph.adj, graph.deg
 
     kind = sketch.kind if sketch is not None else "exact"
+    if plan is None:
+        # wedge chunks are [C, d_max]-shaped, so default far below the
+        # pair-fold chunk; an explicit plan's edge_chunk wins untouched
+        kw.setdefault("edge_chunk", 1024)
+    plan = eng.resolve_plan(plan, graph, sketch, kw)
 
     def wedge_values(pairs, mask):
         """For an edge chunk [C,2]: sum over qualifying wedges of |∩3|."""
@@ -75,11 +86,13 @@ def four_clique_count(graph: Graph, sketch: Optional[SketchSet] = None,
                     == inter_uv[:, None, :]) & (inter_uv[:, None, :] < n)
             triple = jnp.sum(hits, axis=2).astype(jnp.float32)    # [C, d_max]
         elif kind == "bf":
-            ru = jnp.take(sketch.data, u, axis=0)[:, None, :]
-            rv = jnp.take(sketch.data, v, axis=0)[:, None, :]
-            rw = jnp.take(sketch.data, jnp.where(tri, nv, 0), axis=0)
             b = sketch.num_hashes
-            triple = est.bf_size_swamidass(ru & rv & rw, b)       # [C, d_max]
+            total_bits = sketch.data.shape[1] * 32
+            w_safe = jnp.where(tri, nv, 0)
+            # engine's 3-way popcount provider: block-gather kernel when
+            # planned, broadcast jnp gather otherwise
+            ones = eng.wedge_triple_ones(sketch, u, v, w_safe, plan)
+            triple = est.bf_intersection_and_from_ones(ones, total_bits, b)
         elif kind == "kh":
             mu = jnp.take(sketch.data, u, axis=0)[:, None, :]
             mv = jnp.take(sketch.data, v, axis=0)[:, None, :]
@@ -103,18 +116,4 @@ def four_clique_count(graph: Graph, sketch: Optional[SketchSet] = None,
 
         return jnp.sum(jnp.where(tri, triple, 0.0))
 
-    # chunked fold over edges
-    if m == 0:
-        return jnp.float32(0.0)
-    pad = (-m) % edge_chunk
-    edges_p = jnp.concatenate([edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
-    mask = jnp.concatenate([jnp.ones(m, bool), jnp.zeros(pad, bool)])
-
-    def body(c, xs):
-        pairs, msk = xs
-        return c + wedge_values(pairs, msk), None
-
-    total, _ = jax.lax.scan(
-        body, jnp.float32(0.0),
-        (edges_p.reshape(-1, edge_chunk, 2), mask.reshape(-1, edge_chunk)))
-    return total / 4.0
+    return eng.fold_edges(graph.edges, wedge_values, plan) / 4.0

@@ -16,8 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ... import engine as eng
 from ..graph import Graph
-from ..intersect import make_pair_cardinality_fn
 from ..sketches import SketchSet
 
 
@@ -51,26 +51,23 @@ def _connected_components(n: int, edges: jax.Array, keep: jax.Array,
 
 def jarvis_patrick(graph: Graph, sketch: Optional[SketchSet] = None,
                    similarity: str = "common", threshold: float = 2.0,
-                   **kw):
+                   plan: Optional[eng.EnginePlan] = None,
+                   edge_cards: Optional[jax.Array] = None, **kw):
     """Returns (labels int32[n], num_clusters int32).
 
     similarity: 'common' (|N_u∩N_v| ≥ threshold), 'jaccard' or 'overlap'
-    (ratio ≥ threshold).
+    (ratio ≥ threshold). ``edge_cards`` lets a MiningSession reuse its
+    shared per-edge cardinality pass.
     """
-    fn = make_pair_cardinality_fn(graph, sketch, **kw)
+    from .similarity import similarity_from_cardinalities
+
     edges = graph.edges
-    inter = fn(edges)
+    if edge_cards is None:
+        plan = eng.resolve_plan(plan, graph, sketch, kw)
+        edge_cards = eng.edge_cardinalities(graph, sketch, plan)
     du = jnp.take(graph.deg, edges[:, 0]).astype(jnp.float32)
     dv = jnp.take(graph.deg, edges[:, 1]).astype(jnp.float32)
-    if similarity == "common":
-        score = inter
-    elif similarity == "jaccard":
-        union = jnp.maximum(du + dv - inter, 1.0)
-        score = inter / union
-    elif similarity == "overlap":
-        score = inter / jnp.maximum(jnp.minimum(du, dv), 1.0)
-    else:
-        raise ValueError(similarity)
+    score = similarity_from_cardinalities(edge_cards, du, dv, similarity)
     keep = score >= threshold
     labels = _connected_components(graph.n, edges, keep)
     # count distinct labels among non-isolated semantics: every vertex is its

@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 import numpy as np
 import jax.numpy as jnp
 
+from ... import engine as eng
 from ..graph import Graph, from_edge_array
 from ..sketches import SketchSet, build
 from .similarity import pair_similarity
@@ -62,7 +63,8 @@ def link_prediction_effectiveness(graph: Graph, measure: str = "common",
                                   removed_fraction: float = 0.1,
                                   sketch_kind: Optional[str] = None,
                                   storage_budget: float = 0.25,
-                                  num_hashes: int = 2, seed: int = 0) -> float:
+                                  num_hashes: int = 2, seed: int = 0,
+                                  plan: Optional[eng.EnginePlan] = None) -> float:
     """Full Listing-5 protocol; returns ef ∈ [0, 1]."""
     sparse, removed = split_edges(graph, removed_fraction, seed)
     candidates = _distance2_candidates(sparse)
@@ -73,7 +75,8 @@ def link_prediction_effectiveness(graph: Graph, measure: str = "common",
         sketch = build(sparse, sketch_kind, storage_budget,
                        num_hashes=num_hashes, seed=seed)
     scores = np.asarray(
-        pair_similarity(sparse, jnp.asarray(candidates), measure, sketch))
+        pair_similarity(sparse, jnp.asarray(candidates), measure, sketch,
+                        plan=plan))
     r = removed.shape[0]
     top = np.argsort(-scores, kind="stable")[:r]
     predicted = {(int(a), int(b)) for a, b in candidates[top]}

@@ -12,27 +12,41 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ... import engine as eng
 from ..exact import exact_pair_intersection_elements
 from ..graph import Graph
-from ..intersect import make_pair_cardinality_fn
 from ..sketches import SketchSet, bloom_membership
 
 
+def similarity_from_cardinalities(inter: jax.Array, du: jax.Array,
+                                  dv: jax.Array, measure: str) -> jax.Array:
+    """Derive a cardinality-based similarity from |N_u∩N_v| + degrees.
+
+    The shared scoring step of Listing 3/4: one per-edge cardinality pass
+    (e.g. a MiningSession's cache) feeds any of these measures.
+    """
+    if measure == "common":
+        return inter
+    if measure == "total":
+        return du + dv - inter
+    if measure == "jaccard":
+        return inter / jnp.maximum(du + dv - inter, 1.0)
+    if measure == "overlap":
+        return inter / jnp.maximum(jnp.minimum(du, dv), 1.0)
+    raise ValueError(measure)
+
+
 def pair_similarity(graph: Graph, pairs: jax.Array, measure: str,
-                    sketch: Optional[SketchSet] = None, **kw) -> jax.Array:
+                    sketch: Optional[SketchSet] = None,
+                    plan: Optional[eng.EnginePlan] = None, **kw) -> jax.Array:
     """measure ∈ {jaccard, overlap, common, total, adamic_adar, resource_alloc}."""
     du = jnp.take(graph.deg, pairs[:, 0]).astype(jnp.float32)
     dv = jnp.take(graph.deg, pairs[:, 1]).astype(jnp.float32)
 
     if measure in ("jaccard", "overlap", "common", "total"):
-        inter = make_pair_cardinality_fn(graph, sketch, **kw)(pairs)
-        if measure == "common":
-            return inter
-        if measure == "total":
-            return du + dv - inter
-        if measure == "jaccard":
-            return inter / jnp.maximum(du + dv - inter, 1.0)
-        return inter / jnp.maximum(jnp.minimum(du, dv), 1.0)
+        plan = eng.resolve_plan(plan, graph, sketch, kw)
+        inter = eng.edge_cardinalities(graph, sketch, plan, edges=pairs)
+        return similarity_from_cardinalities(inter, du, dv, measure)
 
     if measure in ("adamic_adar", "resource_alloc"):
         n = graph.n

@@ -3,6 +3,10 @@
 TC_★ = (1/3) Σ_{(u,v)∈E} |N_u ∩ N_v|_★ over canonical edges. Exact when
 card_fn is the galloping baseline; an AU/CN (and for kH, MLE) estimator when
 card_fn is a ProbGraph estimator (Thm VII.1 gives the tail bounds).
+
+Execution (chunking, padding, kernel dispatch, edge sharding) is delegated
+to the batched mining engine: pass an ``EnginePlan`` or the legacy kwargs
+(``edge_chunk=``, ``use_kernel=``, ...), which resolve to one.
 """
 from __future__ import annotations
 
@@ -11,34 +15,36 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ... import engine as eng
 from ..graph import Graph
-from ..intersect import CardFn, fold_edges, make_pair_cardinality_fn
+from ..intersect import CardFn
 from ..sketches import SketchSet
 
 
 def triangle_count(graph: Graph, sketch: Optional[SketchSet] = None,
                    card_fn: Optional[CardFn] = None,
-                   edge_chunk: int = 65536, **kw) -> jax.Array:
+                   plan: Optional[eng.EnginePlan] = None, **kw) -> jax.Array:
     """Returns float32 TC estimate (exact integer value if sketch is None)."""
-    fn = card_fn or make_pair_cardinality_fn(graph, sketch, **kw)
-
-    def chunk(pairs, mask):
-        vals = fn(pairs)
-        return jnp.sum(jnp.where(mask, vals, 0.0))
-
-    return fold_edges(graph.edges, chunk, edge_chunk) / 3.0
+    plan = eng.resolve_plan(plan, graph, sketch, kw)
+    return eng.sum_edge_cardinalities(graph, sketch, plan, card_fn) / 3.0
 
 
 def local_clustering_coefficient(graph: Graph, sketch: Optional[SketchSet] = None,
+                                 plan: Optional[eng.EnginePlan] = None,
+                                 edge_cards: Optional[jax.Array] = None,
                                  **kw) -> jax.Array:
     """Per-vertex clustering coefficient c_v = 2·t_v / (d_v (d_v−1)) where t_v
-    sums |N_u∩N_v| over v's incident edges (a TC application, paper §III-A)."""
-    fn = make_pair_cardinality_fn(graph, sketch, **kw)
+    sums |N_u∩N_v| over v's incident edges (a TC application, paper §III-A).
+
+    ``edge_cards`` lets a MiningSession reuse its shared per-edge pass.
+    """
+    if edge_cards is None:
+        plan = eng.resolve_plan(plan, graph, sketch, kw)
+        edge_cards = eng.edge_cardinalities(graph, sketch, plan)
     edges = graph.edges
-    vals = fn(edges)
     tv = jnp.zeros(graph.n, jnp.float32)
-    tv = tv.at[edges[:, 0]].add(vals)
-    tv = tv.at[edges[:, 1]].add(vals)
+    tv = tv.at[edges[:, 0]].add(edge_cards)
+    tv = tv.at[edges[:, 1]].add(edge_cards)
     d = graph.deg.astype(jnp.float32)
     denom = jnp.maximum(d * (d - 1.0), 1.0)
     return tv / denom

@@ -1,10 +1,11 @@
 """Uniform |N_u ∩ N_v| providers: exact or any ProbGraph estimator.
 
 `make_pair_cardinality_fn(graph, sketch)` returns a batched pure function
-pairs[P,2] -> float32[P]; this is the single seam through which every graph
-algorithm (tc / cliques / clustering / similarity / linkpred) consumes either
-the exact galloping baseline or a sketch estimator — the paper's "plug in PG
-routines in place of exact set intersections" (Listing 6).
+pairs[P,2] -> float32[P] — the paper's "plug in PG routines in place of
+exact set intersections" (Listing 6). Estimator *selection* lives here;
+*execution* (chunking, padding, degree-ordered layout, kernel block shapes,
+edge sharding) is the batched mining engine's job: algorithms consume this
+seam through `repro.engine` and an `EnginePlan`.
 """
 from __future__ import annotations
 
@@ -23,7 +24,8 @@ CardFn = Callable[[jax.Array], jax.Array]
 
 def make_pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet] = None,
                              use_kernel: bool = False, variant: str = "union",
-                             estimator: Optional[str] = None) -> CardFn:
+                             estimator: Optional[str] = None,
+                             block_e: int = 8, block_w: int = 512) -> CardFn:
     if sketch is None:
         def exact_fn(pairs: jax.Array) -> jax.Array:
             return exact_pair_cardinalities(graph, pairs).astype(jnp.float32)
@@ -40,7 +42,8 @@ def make_pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet] = None,
             from repro.kernels import ops as kops
 
             def bf_kernel_fn(pairs: jax.Array) -> jax.Array:
-                ones = kops.bf_edge_intersect(data, pairs)
+                ones = kops.bf_edge_intersect(data, pairs, block_e=block_e,
+                                              block_w=block_w)
                 if kind == "bf_l":
                     return ones.astype(jnp.float32) / b
                 return est.bf_intersection_and_from_ones(ones, total_bits, b)
@@ -88,24 +91,3 @@ def make_pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet] = None,
         return kmv_fn
 
     raise ValueError(f"unknown sketch kind {sketch.kind}")
-
-
-def fold_edges(edges: jax.Array, chunk_fn, edge_chunk: int = 65536):
-    """Masked scan-fold of `chunk_fn(pairs, mask) -> scalar` over edge chunks."""
-    m = edges.shape[0]
-    if m == 0:
-        return jnp.float32(0)
-    pad = (-m) % edge_chunk if m > edge_chunk else 0
-    if m <= edge_chunk:
-        return chunk_fn(edges, jnp.ones(m, bool))
-    edges_p = jnp.concatenate([edges, jnp.zeros((pad, 2), edges.dtype)], axis=0)
-    mask = jnp.concatenate([jnp.ones(m, bool), jnp.zeros(pad, bool)])
-
-    def body(c, xs):
-        pairs, msk = xs
-        return c + chunk_fn(pairs, msk), None
-
-    total, _ = jax.lax.scan(
-        body, jnp.float32(0),
-        (edges_p.reshape(-1, edge_chunk, 2), mask.reshape(-1, edge_chunk)))
-    return total

@@ -41,8 +41,11 @@ def bloom_words_for_budget(n: int, m: int, s: float, min_words: int = 2) -> int:
     csr_bits = (2 * m + n + 1) * 32
     bits_per_vertex = max(1.0, s * csr_bits / max(n, 1))
     words = int(np.ceil(bits_per_vertex / 32.0))
-    # round to a multiple of 2 words (64-bit lanes) for vectorization
-    words = max(min_words, words + (words % 2))
+    # round UP to a multiple of 2 words (64-bit lanes) for vectorization;
+    # clamping to min_words happens first so an odd min_words cannot leak an
+    # odd word count through
+    words = max(words, min_words)
+    words += words % 2
     return words
 
 

@@ -47,6 +47,9 @@ BASE_RULES: Dict[str, Axis] = {
     "conv": None,
     "layers": None,
     "moe_capacity": None,
+    # graph mining (repro.engine): edge lists shard over every mesh axis —
+    # fixed-size sketches make per-edge work uniform, so any split balances
+    "edge": ("pod", "data", "model"),
 }
 
 
@@ -57,6 +60,11 @@ class _Ctx(threading.local):
 
 
 _CTX = _Ctx()
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh installed by ``use_rules`` (None outside any context)."""
+    return _CTX.mesh
 
 
 @contextlib.contextmanager

@@ -1,0 +1,25 @@
+"""Batched mining engine: the shared execution seam for ProbGraph algorithms.
+
+``EnginePlan`` describes *how* set-intersection work runs (batching, Pallas
+block shapes, estimator dispatch, edge-axis sharding); ``session`` amortizes
+one sketch build across many queries. See engine.py for the full story.
+"""
+from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
+                   order_edges_by_hub, plan_for)
+from .engine import (
+    MiningSession,
+    edge_cardinalities,
+    pair_cardinality_fn,
+    resolve_plan,
+    session,
+    sum_edge_cardinalities,
+    triple_cardinality_ones,
+    wedge_triple_ones,
+)
+
+__all__ = [
+    "EnginePlan", "MiningSession", "edge_cardinalities", "fold_edges",
+    "fold_edges_masked", "map_edges", "order_edges_by_hub",
+    "pair_cardinality_fn", "plan_for", "resolve_plan", "session",
+    "sum_edge_cardinalities", "triple_cardinality_ones", "wedge_triple_ones",
+]

@@ -1,0 +1,255 @@
+"""Batched mining engine: one execution seam for every ProbGraph algorithm.
+
+Responsibilities (SISA's set-centric batching + GBBS's shared primitives):
+
+  * ``pair_cardinality_fn``  — the |N_u ∩ N_v| provider, plan-dispatched
+    between the exact galloping baseline, jnp estimator paths, and the
+    block-gather Pallas kernels.
+  * ``edge_cardinalities`` / ``sum_edge_cardinalities`` — chunked per-edge
+    map / fold over an edge list with degree-ordered layout and optional
+    shard_map over the edge axis (repro.distributed.sharding rules).
+  * ``triple_cardinality_ones`` — the 3-way popcount provider for 4-clique
+    triple intersections (block-gather kernel or jnp gather).
+  * ``session`` — multi-query amortization: build the sketch once, run
+    TC + LCC + clustering + 4-clique over the shared sketch and the shared
+    per-edge cardinality pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.intersect import CardFn, make_pair_cardinality_fn
+from ..core.sketches import SketchSet, build as build_sketch
+from ..distributed import sharding
+from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
+                   order_edges_by_hub, plan_for)
+
+_PLAN_KWARGS = ("edge_chunk", "block_e", "block_w", "use_kernel",
+                "degree_order", "estimator", "variant", "shard_edges")
+
+
+def resolve_plan(plan: Optional[EnginePlan], graph: Graph,
+                 sketch: Optional[SketchSet] = None, kw: Optional[dict] = None
+                 ) -> EnginePlan:
+    """Merge legacy per-call kwargs (edge_chunk=, use_kernel=, ...) into a
+    plan; keeps the pre-engine algorithm signatures working unchanged."""
+    kw = kw or {}
+    unknown = set(kw) - set(_PLAN_KWARGS)
+    if unknown:
+        raise TypeError(f"unknown plan option(s): {sorted(unknown)}")
+    if plan is None:
+        return plan_for(graph, sketch, **kw)
+    return plan.with_(**kw) if kw else plan
+
+
+def pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet],
+                        plan: EnginePlan) -> CardFn:
+    """The single |N_u ∩ N_v| seam, dispatched by the plan."""
+    return make_pair_cardinality_fn(
+        graph, sketch, use_kernel=plan.use_kernel, variant=plan.variant,
+        estimator=plan.estimator, block_e=plan.block_e, block_w=plan.block_w)
+
+
+def edge_cardinalities(graph: Graph, sketch: Optional[SketchSet],
+                       plan: EnginePlan, edges: Optional[jax.Array] = None
+                       ) -> jax.Array:
+    """Per-edge |N_u ∩ N_v| (float32[m]) in the caller's edge order.
+
+    Degree-ordered layout is applied internally (and inverted on the way
+    out) so the kernel path sees hub-clustered blocks.
+    """
+    fn = pair_cardinality_fn(graph, sketch, plan)
+    edges = graph.edges if edges is None else edges
+    if plan.degree_order and edges.shape[0] > 1:
+        edges_s, inv = order_edges_by_hub(graph, edges)
+        return jnp.take(map_edges(edges_s, fn, plan), inv)
+    return map_edges(edges, fn, plan)
+
+
+def sum_edge_cardinalities(graph: Graph, sketch: Optional[SketchSet],
+                           plan: EnginePlan,
+                           card_fn: Optional[CardFn] = None) -> jax.Array:
+    """Σ_{(u,v)∈E} |N_u ∩ N_v| — the TC numerator, fold-executed."""
+    fn = card_fn or pair_cardinality_fn(graph, sketch, plan)
+    edges = graph.edges
+    if plan.degree_order and edges.shape[0] > 1:
+        edges, _ = order_edges_by_hub(graph, edges)   # sums need no unsort
+
+    def chunk(pairs, mask):
+        return jnp.sum(jnp.where(mask, fn(pairs), 0.0))
+
+    if plan.shard_edges:
+        return _sharded_fold(edges, chunk, plan)
+    return fold_edges(edges, chunk, plan)
+
+
+def _sharded_fold(edges: jax.Array, chunk_fn, plan: EnginePlan) -> jax.Array:
+    """shard_map the masked edge fold over the active mesh's edge axes.
+
+    Falls back to the local fold when no mesh is active. Fixed-size sketch
+    rows mean every shard does identical work — the paper's no-straggler
+    property — so a plain psum closes the reduction.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    mesh = sharding.active_mesh()
+    if mesh is None:
+        return fold_edges(edges, chunk_fn, plan)
+    spec = sharding.spec_for(("edge", None), mesh=mesh)
+    axes = spec[0]
+    if axes is None:
+        return fold_edges(edges, chunk_fn, plan)
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    nshards = int(np.prod([mesh.shape[a] for a in axes]))
+    m = edges.shape[0]
+    pad = (-m) % (nshards * min(plan.edge_chunk, max(m, 1)))
+    edges_p = jnp.concatenate(
+        [edges, jnp.zeros((pad, edges.shape[1]), edges.dtype)], axis=0)
+    mask = jnp.concatenate([jnp.ones(m, bool), jnp.zeros(pad, bool)])
+
+    mask_spec = jax.sharding.PartitionSpec(spec[0])
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(spec, mask_spec),
+                       out_specs=jax.sharding.PartitionSpec())
+    def fold_shard(edge_shard, mask_shard):
+        local = fold_edges_masked(edge_shard, mask_shard, chunk_fn, plan)
+        for ax in axes:
+            local = jax.lax.psum(local, ax)
+        return local
+
+    return fold_shard(edges_p, mask)
+
+
+def triple_cardinality_ones(sketch: SketchSet, triples: jax.Array,
+                            plan: EnginePlan) -> jax.Array:
+    """popcnt(Bu & Bv & Bw) per (u, v, w) triple — int32[T].
+
+    Kernel path gathers the three rows per grid step (block-gather); jnp
+    path materializes the gathered rows. Both produce identical popcounts,
+    so downstream estimates are bit-identical.
+    """
+    if sketch.kind != "bf":
+        raise ValueError("triple_cardinality_ones needs a Bloom sketch")
+    if plan.use_kernel:
+        from ..kernels import ops as kops
+        return kops.bf_edge_intersect3(sketch.data, triples,
+                                       block_e=plan.block_e,
+                                       block_w=plan.block_w)
+    ru = jnp.take(sketch.data, triples[:, 0], axis=0)
+    rv = jnp.take(sketch.data, triples[:, 1], axis=0)
+    rw = jnp.take(sketch.data, triples[:, 2], axis=0)
+    return jnp.sum(jax.lax.population_count(ru & rv & rw), axis=-1
+                   ).astype(jnp.int32)
+
+
+def wedge_triple_ones(sketch: SketchSet, u: jax.Array, v: jax.Array,
+                      w_grid: jax.Array, plan: EnginePlan) -> jax.Array:
+    """popcnt(Bu & Bv & Bw) over a wedge grid: u, v int32[C], w int32[C, d]
+    -> int32[C, d] (the 4-clique triple-intersection provider).
+
+    Kernel path flattens to (u, v, w) triples for the 3-way block-gather
+    kernel; the jnp path keeps the broadcast form so the u/v rows are
+    gathered once per edge rather than once per wedge. Identical integer
+    popcounts either way.
+    """
+    c, d = w_grid.shape
+    if plan.use_kernel:
+        triples = jnp.stack([
+            jnp.broadcast_to(u[:, None], (c, d)).reshape(-1),
+            jnp.broadcast_to(v[:, None], (c, d)).reshape(-1),
+            w_grid.reshape(-1)], axis=1)
+        return triple_cardinality_ones(sketch, triples, plan).reshape(c, d)
+    ru = jnp.take(sketch.data, u, axis=0)[:, None, :]
+    rv = jnp.take(sketch.data, v, axis=0)[:, None, :]
+    rw = jnp.take(sketch.data, w_grid, axis=0)
+    return jnp.sum(jax.lax.population_count(ru & rv & rw), axis=-1
+                   ).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# multi-query session
+# ----------------------------------------------------------------------------
+
+class MiningSession:
+    """Amortizes one sketch build + one per-edge cardinality pass across
+    TC, LCC, Jarvis-Patrick and 4-clique queries on the same graph."""
+
+    def __init__(self, graph: Graph, sketch: Optional[SketchSet],
+                 plan: EnginePlan):
+        self.graph = graph
+        self.sketch = sketch
+        self.plan = plan
+        self._edge_cards: Optional[jax.Array] = None
+
+    def edge_cardinalities(self) -> jax.Array:
+        """Cached |N_u ∩ N_v| over graph.edges (the shared mining pass)."""
+        if self._edge_cards is None:
+            self._edge_cards = edge_cardinalities(
+                self.graph, self.sketch, self.plan)
+        return self._edge_cards
+
+    def triangle_count(self) -> jax.Array:
+        return jnp.sum(self.edge_cardinalities()) / 3.0
+
+    def local_clustering(self) -> jax.Array:
+        from ..core.algorithms.tc import local_clustering_coefficient
+        return local_clustering_coefficient(
+            self.graph, self.sketch, plan=self.plan,
+            edge_cards=self.edge_cardinalities())
+
+    def jarvis_patrick(self, similarity: str = "common",
+                       threshold: float = 2.0):
+        from ..core.algorithms.clustering import jarvis_patrick
+        return jarvis_patrick(self.graph, self.sketch, similarity, threshold,
+                              plan=self.plan,
+                              edge_cards=self.edge_cardinalities())
+
+    def four_clique_count(self, **kw) -> jax.Array:
+        from ..core.algorithms.cliques import four_clique_count
+        return four_clique_count(self.graph, self.sketch, plan=self.plan, **kw)
+
+    def similarity(self, pairs: jax.Array, measure: str = "jaccard"
+                   ) -> jax.Array:
+        from ..core.algorithms.similarity import pair_similarity
+        return pair_similarity(self.graph, pairs, measure, self.sketch,
+                               plan=self.plan)
+
+    def edge_similarity(self, measure: str = "jaccard") -> jax.Array:
+        """Similarity scores over graph.edges from the cached shared pass."""
+        from ..core.algorithms.similarity import similarity_from_cardinalities
+        edges = self.graph.edges
+        du = jnp.take(self.graph.deg, edges[:, 0]).astype(jnp.float32)
+        dv = jnp.take(self.graph.deg, edges[:, 1]).astype(jnp.float32)
+        return similarity_from_cardinalities(self.edge_cardinalities(),
+                                             du, dv, measure)
+
+    def stats(self) -> dict:
+        sk = self.sketch
+        return {
+            "n": self.graph.n, "m": self.graph.m,
+            "sketch": sk.kind if sk is not None else "exact",
+            "sketch_bytes": int(sk.data.size * sk.data.dtype.itemsize)
+            if sk is not None else 0,
+            "plan": self.plan,
+        }
+
+
+def session(graph: Graph, sketch: Optional[SketchSet] | str = "bf",
+            storage_budget: float = 0.25, num_hashes: int = 2, seed: int = 0,
+            plan: Optional[EnginePlan] = None, **plan_kw) -> MiningSession:
+    """Open a multi-query mining session over one shared sketch build.
+
+    ``sketch`` may be a prebuilt SketchSet, a kind string ("bf" | "kh" |
+    "1h" | "kmv") to build here, or None for the exact baseline.
+    """
+    if isinstance(sketch, str):
+        sketch = build_sketch(graph, sketch, storage_budget,
+                              num_hashes=num_hashes, seed=seed)
+    return MiningSession(graph, sketch, resolve_plan(plan, graph, sketch,
+                                                     plan_kw))

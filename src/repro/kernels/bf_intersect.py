@@ -9,15 +9,23 @@ adaptation runs it on the VPU (8×128 lanes) with explicit VMEM tiling:
     (1 AND + 1 popcount + 1 add per 8 bytes), so the kernel is HBM-bound and
     tiles are chosen to stream at full bandwidth.
 
-  * ``bf_edge_intersect_kernel``: the fused-gather form. The edge list lives
-    in SMEM via PrefetchScalarGridSpec; the BlockSpec ``index_map`` reads the
-    row ids and DMAs the two Bloom rows straight from the sketch matrix in
-    HBM — no [E, W] gather is ever materialized. This is the TPU-idiomatic
-    replacement of the CPU pointer-gather, and saves 2·E·W words of HBM
-    round-trip when E ≫ n (skewed graphs revisit hub rows, which then stay
-    in VMEM across consecutive edges).
+  * ``bf_edge_intersect``: the block-gather form (SISA-style: many set
+    operations per issued grid step). The edge list lives in SMEM via
+    PrefetchScalarGridSpec; each (block_e, block_w) grid step issues
+    ``block_e`` row-pair DMAs from the sketch matrix (kept in ANY/HBM) into
+    VMEM scratch slabs and AND+popcounts the whole slab in one VPU pass.
+    Compared to the earlier per-edge form (grid=(E, W/block_w), two (1,
+    block_w) slabs per step) this amortizes grid/DMA issue overhead over
+    ``block_e`` edges and lets degree-ordered edge blocks (see
+    ``repro.engine.plan.order_edges_by_hub``) reuse hub rows that are already
+    resident in the same slab's HBM stream.
 
-  * 3-way AND variant for the 4-clique triple intersections.
+  * ``bf_edge_intersect3``: the 3-way block-gather variant for 4-clique
+    triple intersections popcnt(Bu AND Bv AND Bw) over (u, v, w) triples.
+
+Callers must pad: E to a multiple of ``block_e`` (pad edges with (0, 0) —
+row 0 always exists and results are sliced off) and W to a multiple of
+``block_w`` (zero words contribute no bits). ``repro.kernels.ops`` does both.
 
 All kernels validate in interpret mode against ``ref.py`` (see tests).
 """
@@ -96,45 +104,132 @@ def bf_intersect3_pairs(a: jax.Array, b: jax.Array, c: jax.Array, *,
 
 
 # ----------------------------------------------------------------------------
-# fused-gather edge kernel (scalar-prefetched edge list)
+# block-gather edge kernels (scalar-prefetched edge list, manual row DMA)
 # ----------------------------------------------------------------------------
 
-def _edge_kernel(u_ref, v_ref, a_ref, b_ref, o_ref):
-    # u_ref/v_ref are the prefetched scalar index arrays (SMEM); the actual
-    # gather already happened in the index_map; here we just AND+popcount.
+def _gather_rows(ids_ref, base, bloom_ref, bufs, sems, *, count, block_w, j):
+    """DMA `count` sketch rows (word slab j) into the VMEM scratch slabs.
+
+    ids_ref is a tuple of SMEM-prefetched index arrays (one per slab). All
+    row copies are started first and waited on afterwards, so the per-row
+    fetches pipeline: the whole (count × len(bufs)) DMA burst is in flight
+    at once instead of serializing row by row.
+    """
+    def row_copies(r):
+        return [pltpu.make_async_copy(
+            bloom_ref.at[ids[base + r], pl.ds(j * block_w, block_w)],
+            buf.at[r], sems.at[s])
+            for s, (ids, buf) in enumerate(zip(ids_ref, bufs))]
+
+    def start(r, carry):
+        for cp in row_copies(r):
+            cp.start()
+        return carry
+
+    def wait(r, carry):
+        for cp in row_copies(r):
+            cp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, count, start, 0)
+    jax.lax.fori_loop(0, count, wait, 0)
+
+
+def _edge_block_kernel(u_ref, v_ref, bloom_ref, o_ref, a_buf, b_buf, sems, *,
+                       block_e, block_w):
+    i = pl.program_id(0)
     j = pl.program_id(1)
+    _gather_rows((u_ref, v_ref), i * block_e, bloom_ref, (a_buf, b_buf), sems,
+                 count=block_e, block_w=block_w, j=j)
 
     @pl.when(j == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    cnt = jax.lax.population_count(a_ref[...] & b_ref[...])
+    cnt = jax.lax.population_count(a_buf[...] & b_buf[...])
     o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
 
 
-def bf_edge_intersect(bloom: jax.Array, edges: jax.Array, *,
+def bf_edge_intersect(bloom: jax.Array, edges: jax.Array, *, block_e: int = 8,
                       block_w: int = 512, interpret: bool = False) -> jax.Array:
     """uint32[n, W] sketch matrix + int32[E, 2] edges -> int32[E].
 
-    Rows are gathered inside the BlockSpec index_map (scalar prefetch);
-    grid = (E, W/block_w); each step DMAs two (1, block_w) row slabs.
+    Block-gather: grid = (E/block_e, W/block_w); each step DMAs block_e
+    Bloom-row pairs into (block_e, block_w) VMEM slabs and reduces them in
+    one VPU pass. E must be a multiple of block_e and W of block_w.
     """
     n, w = bloom.shape
     e = edges.shape[0]
     block_w = min(block_w, w)
-    grid = (e, pl.cdiv(w, block_w))
+    block_e = min(block_e, e)
+    grid = (pl.cdiv(e, block_e), pl.cdiv(w, block_w))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_w), lambda i, j, u, v: (u[i], j)),
-            pl.BlockSpec((1, block_w), lambda i, j, u, v: (v[i], j)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+        out_specs=pl.BlockSpec((block_e,), lambda i, j, u, v: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((block_e, block_w), jnp.uint32),
+            pltpu.VMEM((block_e, block_w), jnp.uint32),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
-        out_specs=pl.BlockSpec((1,), lambda i, j, u, v: (i,)),
     )
+    kern = functools.partial(_edge_block_kernel, block_e=block_e,
+                             block_w=block_w)
     return pl.pallas_call(
-        _edge_kernel,
+        kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
         interpret=interpret,
-    )(edges[:, 0], edges[:, 1], bloom, bloom)
+    )(edges[:, 0], edges[:, 1], bloom)
+
+
+def _edge3_block_kernel(u_ref, v_ref, w_ref, bloom_ref, o_ref, a_buf, b_buf,
+                        c_buf, sems, *, block_e, block_w):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    _gather_rows((u_ref, v_ref, w_ref), i * block_e, bloom_ref,
+                 (a_buf, b_buf, c_buf), sems, count=block_e, block_w=block_w,
+                 j=j)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cnt = jax.lax.population_count(a_buf[...] & b_buf[...] & c_buf[...])
+    o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
+
+
+def bf_edge_intersect3(bloom: jax.Array, triples: jax.Array, *,
+                       block_e: int = 8, block_w: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """uint32[n, W] + int32[T, 3] triples -> int32[T] popcnt(Bu & Bv & Bw).
+
+    Same block-gather treatment as ``bf_edge_intersect`` with three slabs —
+    the 4-clique triple-intersection hot loop.
+    """
+    n, w = bloom.shape
+    t = triples.shape[0]
+    block_w = min(block_w, w)
+    block_e = min(block_e, t)
+    grid = (pl.cdiv(t, block_e), pl.cdiv(w, block_w))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+        out_specs=pl.BlockSpec((block_e,), lambda i, j, u, v, w: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((block_e, block_w), jnp.uint32),
+            pltpu.VMEM((block_e, block_w), jnp.uint32),
+            pltpu.VMEM((block_e, block_w), jnp.uint32),
+            pltpu.SemaphoreType.DMA((3,)),
+        ],
+    )
+    kern = functools.partial(_edge3_block_kernel, block_e=block_e,
+                             block_w=block_w)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=interpret,
+    )(triples[:, 0], triples[:, 1], triples[:, 2], bloom)

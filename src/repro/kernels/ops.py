@@ -61,11 +61,41 @@ def bf_intersect3_pairs(a: jax.Array, b: jax.Array, c: jax.Array,
     return out[:e]
 
 
-@functools.partial(jax.jit, static_argnames=("block_w",))
+@functools.partial(jax.jit, static_argnames=("block_e", "block_w"))
 def bf_edge_intersect(bloom: jax.Array, edges: jax.Array,
-                      block_w: int = 512) -> jax.Array:
-    return _bf.bf_edge_intersect(bloom, edges.astype(jnp.int32),
-                                 block_w=block_w, interpret=_interpret())
+                      block_e: int = 8, block_w: int = 512) -> jax.Array:
+    """Block-gather AND+popcount over an edge list.
+
+    Edges are padded to a block_e multiple with (0, 0) — row 0 always exists
+    in the sketch matrix and the padded results are sliced off — and the
+    sketch matrix is padded to a block_w word multiple with zero words.
+    """
+    e = edges.shape[0]
+    if e == 0:
+        return jnp.zeros((0,), jnp.int32)
+    be = min(block_e, e)
+    bw = min(block_w, bloom.shape[1])
+    bloom2 = _pad_cols(bloom, bw)
+    edges2 = _pad_rows(edges.astype(jnp.int32), be)
+    out = _bf.bf_edge_intersect(bloom2, edges2, block_e=be, block_w=bw,
+                                interpret=_interpret())
+    return out[:e]
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "block_w"))
+def bf_edge_intersect3(bloom: jax.Array, triples: jax.Array,
+                       block_e: int = 8, block_w: int = 512) -> jax.Array:
+    """3-way block-gather popcount over (u, v, w) triples (4-clique path)."""
+    t = triples.shape[0]
+    if t == 0:
+        return jnp.zeros((0,), jnp.int32)
+    be = min(block_e, t)
+    bw = min(block_w, bloom.shape[1])
+    bloom2 = _pad_cols(bloom, bw)
+    triples2 = _pad_rows(triples.astype(jnp.int32), be)
+    out = _bf.bf_edge_intersect3(bloom2, triples2, block_e=be, block_w=bw,
+                                 interpret=_interpret())
+    return out[:t]
 
 
 @functools.partial(jax.jit, static_argnames=("sentinel", "block_e"))

@@ -27,6 +27,14 @@ def bf_edge_intersect(bloom: jax.Array, edges: jax.Array) -> jax.Array:
     return bf_intersect_pairs(a, b)
 
 
+def bf_edge_intersect3(bloom: jax.Array, triples: jax.Array) -> jax.Array:
+    """Gather rows u, v, w from bloom[n, W] per triple and AND-popcount."""
+    a = jnp.take(bloom, triples[:, 0], axis=0)
+    b = jnp.take(bloom, triples[:, 1], axis=0)
+    c = jnp.take(bloom, triples[:, 2], axis=0)
+    return bf_intersect3_pairs(a, b, c)
+
+
 def mh_intersect_pairs(a: jax.Array, b: jax.Array, sentinel: int) -> jax.Array:
     """|set(a) ∩ set(b)| for sentinel-padded duplicate-free int32[E, k] rows."""
     eq = a[..., :, None] == b[..., None, :]

@@ -39,6 +39,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core import graph as G
 from repro.core import sketches as SK
 from repro.core import estimators as E
+from repro import engine as ENG
 
 
 def build_sketches_distributed(graph: G.Graph, mesh: Mesh, words: int,
@@ -115,6 +116,32 @@ def mine(graph: G.Graph, mesh: Optional[Mesh] = None, storage_budget: float = 0.
             "words": words, "devices": int(np.prod(list(mesh.shape.values())))}
 
 
+def mine_session(graph: G.Graph, algos: list[str], storage_budget: float = 0.25,
+                 num_hashes: int = 2, seed: int = 0, use_kernel: bool = False):
+    """Multi-query mining over ONE shared sketch build (engine.session).
+
+    TC, LCC and clustering additionally share a single per-edge cardinality
+    pass; 4-clique reuses the same sketch. Returns {algo: (value, seconds)}.
+    """
+    t0 = time.time()
+    sess = ENG.session(graph, "bf", storage_budget=storage_budget,
+                       num_hashes=num_hashes, seed=seed, use_kernel=use_kernel)
+    jax.block_until_ready(sess.sketch.data)
+    results = {"build": (sess.stats()["sketch_bytes"], time.time() - t0)}
+    runners = {
+        "tc": lambda: float(sess.triangle_count()),
+        "lcc": lambda: float(jnp.mean(sess.local_clustering())),
+        "4clique": lambda: float(sess.four_clique_count()),
+        "jp": lambda: int(sess.jarvis_patrick("jaccard", 0.05)[1]),
+    }
+    for name in algos:
+        if name not in runners:
+            raise SystemExit(f"unknown algo {name!r}; pick from {sorted(runners)}")
+        t0 = time.time()
+        results[name] = (runners[name](), time.time() - t0)
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=1)
@@ -122,10 +149,26 @@ def main():
     ap.add_argument("--edge-factor", type=int, default=16)
     ap.add_argument("--budget", type=float, default=0.25)
     ap.add_argument("--exact", action="store_true", help="also run exact TC")
+    ap.add_argument("--algos", type=str, default="",
+                    help="comma list (tc,lcc,4clique,jp): run a multi-query "
+                         "engine session over one shared sketch build")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route BF popcounts through the Pallas block-gather "
+                         "kernels (TPU; interpret elsewhere)")
     args = ap.parse_args()
 
     g = G.kronecker(args.scale, args.edge_factor, seed=1)
     print(f"graph: n={g.n} m={g.m} d_max={g.d_max}")
+
+    if args.algos:
+        res = mine_session(g, args.algos.split(","), storage_budget=args.budget,
+                           use_kernel=args.use_kernel)
+        sketch_bytes, build_s = res.pop("build")
+        print(f"session: sketch={sketch_bytes/1e6:.2f}MB build={build_s:.2f}s")
+        for name, (val, secs) in res.items():
+            print(f"  {name:8s} = {val:<12.4g} ({secs:.2f}s)")
+        return
+
     ndev = len(jax.devices())
     mesh = jax.make_mesh((ndev,), ("data",))
     out = mine(g, mesh, storage_budget=args.budget)

@@ -1,0 +1,70 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+CI installs the real hypothesis (requirements-dev.txt) and gets full
+property-based testing with shrinking. On minimal environments this shim
+keeps `tests/test_estimators.py` collecting and running: `@given` replays
+each property over a fixed number of seeded pseudo-random samples, which
+preserves the assertions' coverage of the estimator/bound contracts without
+adding a dependency.
+
+Only the tiny subset of the hypothesis API that test_estimators.py uses is
+implemented: `given`, `settings(max_examples=, deadline=)`,
+`strategies.integers`, and `strategies.lists(..., unique=True)`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def _lists(elem: _Strategy, min_size: int = 0, max_size: int = 10,
+           unique: bool = False) -> _Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        out, seen = [], set()
+        budget = 20 * size + 100
+        while len(out) < size and budget:
+            budget -= 1
+            x = elem.draw(rng)
+            if unique:
+                if x in seen:
+                    continue
+                seen.add(x)
+            out.append(x)
+        return out
+    return _Strategy(draw)
+
+
+class strategies:
+    integers = staticmethod(_integers)
+    lists = staticmethod(_lists)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the strategy parameters (it would resolve them as fixtures)
+        def wrapper():
+            rng = np.random.default_rng(0)
+            for _ in range(getattr(wrapper, "_max_examples", 10)):
+                fn(*(s.draw(rng) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -12,3 +12,15 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip @pytest.mark.tpu tests when no TPU backend is present."""
+    import jax
+
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(reason="requires a TPU backend")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)

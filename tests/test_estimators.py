@@ -1,8 +1,17 @@
-"""Estimator correctness + property-based accuracy/bound tests (hypothesis)."""
+"""Estimator correctness + property-based accuracy/bound tests (hypothesis).
+
+Falls back to the deterministic replay shim in `_hypothesis_fallback` when
+hypothesis is not installed, so the module always collects; CI installs the
+real hypothesis via requirements-dev.txt.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # minimal environments
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import bounds as B
 from repro.core import estimators as E

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro import configs as C
 from repro.models import (reduced, init_params, forward, loss_fn, init_cache,
                           decode_step, build_plan, params_logical_axes,

@@ -81,6 +81,24 @@ def test_budget_sizing():
     assert n * k <= 1.35 * 0.25 * (2 * m + n + 1)
 
 
+def test_bloom_words_always_even():
+    """Word counts round UP to a multiple of 2 (64-bit lanes) — including
+    when the odd value comes from the min_words clamp, the case the old
+    `words + (words % 2)` formulation leaked through."""
+    for n, m, s, min_words in [
+        (100, 300, 0.25, 2),     # budget-driven sizing
+        (100, 300, 1e-6, 3),     # odd min_words clamp must still round up
+        (100, 300, 1e-6, 1),
+        (1000, 50_000, 0.33, 2),
+        (17, 40, 0.5, 5),
+    ]:
+        w = S.bloom_words_for_budget(n, m, s, min_words=min_words)
+        assert w % 2 == 0, (n, m, s, min_words, w)
+        assert w >= min_words
+    # round-up never shrinks below the budget-implied word count
+    assert S.bloom_words_for_budget(100, 300, 0.25) >= 2
+
+
 def test_pack_unpack_roundtrip(rng):
     bits = jnp.asarray(rng.random((5, 96)) < 0.3)
     packed = S.pack_bits(bits)

@@ -7,6 +7,8 @@ import sys
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.distributed.fault import FaultInjector, StepMonitor
 from repro.launch.train import TrainRunConfig, train
 
