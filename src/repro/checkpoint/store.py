@@ -85,6 +85,15 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_meta(directory: str, step: int) -> Dict[str, Any]:
+    """Read a checkpoint's meta.json (leaf shapes/dtypes) without loading the
+    arrays — enough to build a ShapeDtypeStruct target tree for restore when
+    the caller does not know the saved shapes (e.g. a streamed graph whose
+    edge count grew since the snapshot)."""
+    with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)
+
+
 def restore_checkpoint(directory: str, step: int, target_tree,
                        shardings=None):
     """Restore into the structure of `target_tree` (arrays or ShapeDtypeStruct).

@@ -57,6 +57,31 @@ def minhash_deviation_bound(size_x: float, size_y: float, k: int, t: float) -> f
     return min(1.0, 2.0 * np.exp(-2.0 * k * t**2 / s**2))
 
 
+def bf_and_rmse(inter_size, total_bits: int, num_hashes: int) -> np.ndarray:
+    """Vectorized RMSE form of Prop IV.1 (clamped to 0 outside validity).
+
+    Streaming maintenance uses this as the BF sketch's intrinsic error scale:
+    staleness from deferred deletions that stays below it is statistically
+    invisible, so rebuilds can wait (the error-budget policy).
+    """
+    B, b = float(total_bits), float(num_hashes)
+    c = np.asarray(inter_size, dtype=np.float64)
+    mse = np.exp(c * b / (B - 1.0)) * B / b**2 - B / b**2 - c / b
+    return np.sqrt(np.maximum(mse, 0.0))
+
+
+def minhash_error_scale(set_size, k: int, delta: float = 0.05) -> np.ndarray:
+    """Invert Prop IV.2 at fixed k: smallest t whose deviation probability is
+    ≤ delta for a pair of sets of the given size (vectorized over sizes).
+
+    t = (|X|+|Y|)·sqrt(ln(2/δ) / 2k); with |X| = |Y| = set_size this is the
+    MinHash/KMV analogue of :func:`bf_and_rmse` for the streaming
+    error-budget policy.
+    """
+    s = 2.0 * np.asarray(set_size, dtype=np.float64)
+    return s * np.sqrt(np.log(2.0 / float(delta)) / (2.0 * max(int(k), 1)))
+
+
 def minhash_k_for_accuracy(size_x: float, size_y: float, t: float, delta: float) -> int:
     """Invert Prop IV.2: smallest k with deviation ≥t having prob ≤ delta."""
     s = float(size_x) + float(size_y)

@@ -53,19 +53,33 @@ class Graph:
         return self.n_edges
 
 
-def from_edge_array(n: int, edges: np.ndarray, pad_to_max_degree: Optional[int] = None) -> Graph:
-    """Build a Graph from an (possibly duplicated / both-direction) edge array."""
-    edges = np.asarray(edges, dtype=np.int64)
-    if edges.size == 0:
-        edges = np.zeros((0, 2), dtype=np.int64)
-    # drop self loops, canonicalize u < v, dedupe
-    u, v = edges[:, 0], edges[:, 1]
-    keep = u != v
+def canonical_edge_keys(n: int, edges) -> np.ndarray:
+    """Sorted unique canonical keys ``lo·n + hi`` (u < v) of a raw edge array.
+
+    Self loops and out-of-range endpoints are dropped; ``n == 0`` yields an
+    empty key set (the key would otherwise divide by n on the way back out).
+    Shared by :func:`from_edge_array` and the streaming ``DynamicGraph`` so
+    both agree on edge identity.
+    """
+    if edges is None:
+        return np.zeros(0, dtype=np.int64)
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if e.size == 0 or n == 0:
+        return np.zeros(0, dtype=np.int64)
+    u, v = e[:, 0], e[:, 1]
+    keep = (u != v) & (u >= 0) & (v >= 0) & (u < n) & (v < n)
     u, v = u[keep], v[keep]
     lo, hi = np.minimum(u, v), np.maximum(u, v)
-    key = lo * n + hi
-    key = np.unique(key)
-    lo, hi = key // n, key % n
+    return np.unique(lo * n + hi)
+
+
+def from_edge_array(n: int, edges: np.ndarray, pad_to_max_degree: Optional[int] = None) -> Graph:
+    """Build a Graph from an (possibly duplicated / both-direction) edge array."""
+    key = canonical_edge_keys(n, edges)
+    if n > 0:
+        lo, hi = key // n, key % n
+    else:
+        lo = hi = np.zeros(0, dtype=np.int64)
     m = lo.shape[0]
 
     # symmetric CSR
@@ -104,18 +118,46 @@ def from_edge_array(n: int, edges: np.ndarray, pad_to_max_degree: Optional[int] 
 
 def erdos_renyi(n: int, p: float, seed: int = 0) -> Graph:
     rng = np.random.default_rng(seed)
-    # sample via geometric skipping to avoid n^2 memory on big n
     max_pairs = n * (n - 1) // 2
-    exp_edges = int(p * max_pairs)
+    if max_pairs == 0 or p <= 0.0:
+        return from_edge_array(n, np.zeros((0, 2), dtype=np.int64))
     if max_pairs <= 4_000_000:
         iu = np.triu_indices(n, k=1)
         mask = rng.random(iu[0].shape[0]) < p
         edges = np.stack([iu[0][mask], iu[1][mask]], axis=1)
     else:
-        u = rng.integers(0, n, size=2 * exp_edges)
-        v = rng.integers(0, n, size=2 * exp_edges)
-        edges = np.stack([u, v], axis=1)
+        # geometric skipping over the linearized upper triangle: each slot is
+        # kept independently with prob p by jumping Geometric(p) positions at
+        # a time — the exact Bernoulli process, so no duplicate pairs, no
+        # self loops, and E[m] = p·max_pairs, without n² memory on big n.
+        sel = []
+        pos = np.int64(-1)
+        batch = int(1.2 * p * max_pairs) + 1024
+        while pos < max_pairs:
+            gaps = rng.geometric(p, size=batch).astype(np.int64)
+            steps = np.cumsum(gaps) + pos
+            sel.append(steps[steps < max_pairs])
+            pos = steps[-1]
+        t = np.concatenate(sel)
+        edges = np.stack(_triu_unrank(t, n), axis=1)
     return from_edge_array(n, edges)
+
+
+def _triu_unrank(t: np.ndarray, n: int):
+    """Linear index t in the row-major strict upper triangle -> (u, v), u < v.
+
+    Row u starts at S(u) = u·(2n-1-u)/2; invert via the float quadratic root,
+    then correct the rare off-by-one from sqrt rounding.
+    """
+    u = np.floor((2.0 * n - 1.0 - np.sqrt((2.0 * n - 1.0) ** 2 - 8.0 * t)) / 2.0
+                 ).astype(np.int64)
+    for _ in range(2):
+        start = u * (2 * n - 1 - u) // 2
+        u = np.where(start > t, u - 1, u)
+        end = (u + 1) * (2 * n - 2 - u) // 2
+        u = np.where(end <= t, u + 1, u)
+    v = t - u * (2 * n - 1 - u) // 2 + u + 1
+    return u, v
 
 
 def kronecker(scale: int, edge_factor: int = 16, seed: int = 0,

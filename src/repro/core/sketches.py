@@ -70,6 +70,25 @@ def _positions(adj: jax.Array, n: int, num_hashes: int, total_bits: int, seed) -
     return pos, valid
 
 
+def bloom_rows(adj_rows: jax.Array, n: int, words: int, num_hashes: int = 2,
+               seed: int = 0) -> jax.Array:
+    """Bloom rows for a block of padded adjacency rows (pad value == n).
+
+    The per-chunk body of :func:`build_bloom`, exposed so streaming
+    maintenance can selectively rebuild dirty rows through the exact same
+    code path (results are independent of the rows' padded width).
+    """
+    total_bits = words * 32
+    rows = adj_rows.shape[0]
+    pos, valid = _positions(adj_rows, n, num_hashes, total_bits, seed)
+    row_idx = jnp.broadcast_to(jnp.arange(rows)[:, None, None], pos.shape)
+    bits = jnp.zeros((rows, total_bits), dtype=jnp.bool_)
+    bits = bits.at[row_idx.reshape(-1), jnp.where(
+        jnp.broadcast_to(valid[..., None], pos.shape), pos, 0).reshape(-1)].max(
+        jnp.broadcast_to(valid[..., None], pos.shape).reshape(-1))
+    return pack_bits(bits)
+
+
 def build_bloom(graph: Graph, words: int, num_hashes: int = 2, seed: int = 0,
                 chunk: int = 4096) -> jax.Array:
     """Pure-JAX Bloom construction: uint32[n, words].
@@ -78,20 +97,9 @@ def build_bloom(graph: Graph, words: int, num_hashes: int = 2, seed: int = 0,
     benign for OR), then bit-packs 32→1. Work O(b·Σd_v), depth O(log(b·d))
     (paper Table V).
     """
-    n, d_max = graph.n, graph.d_max
-    total_bits = words * 32
-
-    def build_chunk(adj_chunk: jax.Array) -> jax.Array:
-        rows = adj_chunk.shape[0]
-        pos, valid = _positions(adj_chunk, n, num_hashes, total_bits, seed)
-        row_idx = jnp.broadcast_to(jnp.arange(rows)[:, None, None], pos.shape)
-        bits = jnp.zeros((rows, total_bits), dtype=jnp.bool_)
-        bits = bits.at[row_idx.reshape(-1), jnp.where(
-            jnp.broadcast_to(valid[..., None], pos.shape), pos, 0).reshape(-1)].max(
-            jnp.broadcast_to(valid[..., None], pos.shape).reshape(-1))
-        return pack_bits(bits)
-
-    return _map_vertex_chunks(build_chunk, graph.adj, chunk, (words,), jnp.uint32)
+    fn = functools.partial(bloom_rows, n=graph.n, words=words,
+                           num_hashes=num_hashes, seed=seed)
+    return _map_vertex_chunks(fn, graph.adj, chunk, (words,), jnp.uint32)
 
 
 def pack_bits(bits: jax.Array) -> jax.Array:
@@ -148,50 +156,57 @@ def bloom_membership(bloom_row: jax.Array, candidates: jax.Array, n: int,
 # MinHash (k-Hash): one argmin per hash function (multiset semantics)
 # ----------------------------------------------------------------------------
 
+def khash_rows(adj_rows: jax.Array, n: int, k: int, seed: int = 0) -> jax.Array:
+    """k-Hash rows for a block of padded adjacency rows (pad value == n)."""
+    valid = adj_rows < n
+    safe = jnp.where(valid, adj_rows, 0)
+    seeds = jnp.arange(k, dtype=jnp.uint32) + jnp.uint32(seed) * jnp.uint32(0x9E3779B9)
+    h = hash_u32(safe[..., None], seeds)               # [rows, d_max, k]
+    h = jnp.where(valid[..., None], h, PAD_HASH)
+    arg = jnp.argmin(h, axis=1)                         # [rows, k]
+    elems = jnp.take_along_axis(adj_rows, arg, axis=1)  # may pick pad if empty
+    any_valid = jnp.any(valid, axis=1, keepdims=True)
+    return jnp.where(any_valid, elems, n).astype(jnp.int32)
+
+
 def build_khash(graph: Graph, k: int, seed: int = 0, chunk: int = 4096) -> jax.Array:
     """int32[n, k]: element with the smallest h_i among N_v, per hash fn i.
 
     Empty neighborhoods yield the sentinel ``n``. Work O(k·Σd_v),
     depth O(log d) (paper Table V).
     """
-    n = graph.n
-
-    def build_chunk(adj_chunk: jax.Array) -> jax.Array:
-        valid = adj_chunk < n
-        safe = jnp.where(valid, adj_chunk, 0)
-        seeds = jnp.arange(k, dtype=jnp.uint32) + jnp.uint32(seed) * jnp.uint32(0x9E3779B9)
-        h = hash_u32(safe[..., None], seeds)               # [rows, d_max, k]
-        h = jnp.where(valid[..., None], h, PAD_HASH)
-        arg = jnp.argmin(h, axis=1)                         # [rows, k]
-        elems = jnp.take_along_axis(adj_chunk, arg, axis=1)  # may pick pad if empty
-        any_valid = jnp.any(valid, axis=1, keepdims=True)
-        return jnp.where(any_valid, elems, n).astype(jnp.int32)
-
-    return _map_vertex_chunks(build_chunk, graph.adj, chunk, (k,), jnp.int32)
+    fn = functools.partial(khash_rows, n=graph.n, k=k, seed=seed)
+    return _map_vertex_chunks(fn, graph.adj, chunk, (k,), jnp.int32)
 
 
 # ----------------------------------------------------------------------------
 # MinHash (1-Hash): k smallest under a single hash function, sorted by hash
 # ----------------------------------------------------------------------------
 
+def onehash_rows(adj_rows: jax.Array, n: int, k: int, seed: int = 0) -> jax.Array:
+    """1-Hash rows for a block of padded adjacency rows (pad value == n).
+
+    Requires rows sorted ascending (pads last) so the stable argsort breaks
+    hash ties by element id — the invariant both `Graph.adj` and the
+    streaming `DynamicGraph` maintain.
+    """
+    valid = adj_rows < n
+    safe = jnp.where(valid, adj_rows, 0)
+    h = hash_u32(safe, jnp.uint32(seed))
+    h = jnp.where(valid, h, PAD_HASH)
+    order = jnp.argsort(h, axis=1)[:, :k]
+    elems = jnp.take_along_axis(adj_rows, order, axis=1)
+    hsel = jnp.take_along_axis(h, order, axis=1)
+    return jnp.where(hsel == PAD_HASH, n, elems).astype(jnp.int32)
+
+
 def build_1hash(graph: Graph, k: int, seed: int = 0, chunk: int = 4096) -> jax.Array:
     """int32[n, k]: elements with the k smallest h(x), ascending by hash.
 
     Rows with d_v < k are sentinel-padded. Work O(Σd_v), depth O(log d).
     """
-    n = graph.n
-
-    def build_chunk(adj_chunk: jax.Array) -> jax.Array:
-        valid = adj_chunk < n
-        safe = jnp.where(valid, adj_chunk, 0)
-        h = hash_u32(safe, jnp.uint32(seed))
-        h = jnp.where(valid, h, PAD_HASH)
-        order = jnp.argsort(h, axis=1)[:, :k]
-        elems = jnp.take_along_axis(adj_chunk, order, axis=1)
-        hsel = jnp.take_along_axis(h, order, axis=1)
-        return jnp.where(hsel == PAD_HASH, n, elems).astype(jnp.int32)
-
-    return _map_vertex_chunks(build_chunk, graph.adj, chunk, (k,), jnp.int32)
+    fn = functools.partial(onehash_rows, n=graph.n, k=k, seed=seed)
+    return _map_vertex_chunks(fn, graph.adj, chunk, (k,), jnp.int32)
 
 
 def onehash_values(sketch: jax.Array, n: int, seed: int = 0) -> jax.Array:
@@ -205,18 +220,19 @@ def onehash_values(sketch: jax.Array, n: int, seed: int = 0) -> jax.Array:
 # KMV: k smallest hash values mapped to (0, 1]  (paper §IX)
 # ----------------------------------------------------------------------------
 
+def kmv_rows(adj_rows: jax.Array, n: int, k: int, seed: int = 0) -> jax.Array:
+    """KMV rows for a block of padded adjacency rows (pad value == n)."""
+    valid = adj_rows < n
+    safe = jnp.where(valid, adj_rows, 0)
+    h = hash_unit_interval(safe, jnp.uint32(seed))
+    h = jnp.where(valid, h, KMV_PAD)
+    return jnp.sort(h, axis=1)[:, :k]
+
+
 def build_kmv(graph: Graph, k: int, seed: int = 0, chunk: int = 4096) -> jax.Array:
     """float32[n, k]: k smallest unit-interval hashes, ascending; pad = 2.0."""
-    n = graph.n
-
-    def build_chunk(adj_chunk: jax.Array) -> jax.Array:
-        valid = adj_chunk < n
-        safe = jnp.where(valid, adj_chunk, 0)
-        h = hash_unit_interval(safe, jnp.uint32(seed))
-        h = jnp.where(valid, h, KMV_PAD)
-        return jnp.sort(h, axis=1)[:, :k]
-
-    return _map_vertex_chunks(build_chunk, graph.adj, chunk, (k,), jnp.float32)
+    fn = functools.partial(kmv_rows, n=graph.n, k=k, seed=seed)
+    return _map_vertex_chunks(fn, graph.adj, chunk, (k,), jnp.float32)
 
 
 # ----------------------------------------------------------------------------

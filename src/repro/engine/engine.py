@@ -16,6 +16,7 @@ Responsibilities (SISA's set-centric batching + GBBS's shared primitives):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -28,7 +29,7 @@ from ..core.intersect import CardFn, make_pair_cardinality_fn
 from ..core.sketches import SketchSet, build as build_sketch
 from ..distributed import sharding
 from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
-                   order_edges_by_hub, plan_for)
+                   order_edges_by_hub, plan_for, pow2_bucket)
 
 _PLAN_KWARGS = ("edge_chunk", "block_e", "block_w", "use_kernel",
                 "degree_order", "estimator", "variant", "shard_edges")
@@ -229,6 +230,50 @@ class MiningSession:
         return similarity_from_cardinalities(self.edge_cardinalities(),
                                              du, dv, measure)
 
+    def refresh(self, graph: Graph, sketch: Optional[SketchSet] = None,
+                carry_index: Optional[np.ndarray] = None) -> Optional[int]:
+        """Delta-aware cache invalidation: repoint the session at an updated
+        (graph, sketch) and recompute only the invalidated edge cardinalities.
+
+        ``carry_index[j]`` is the position of new edge j in the *previous*
+        ``graph.edges`` when its cached cardinality is still valid (neither
+        endpoint's neighborhood, degree, or sketch row changed), or -1 to
+        recompute. With ``carry_index=None`` the whole cache is dropped.
+        Returns the number of per-edge cardinalities recomputed, or ``None``
+        when the cache was dropped instead (the full pass then happens
+        lazily — nothing was carried over).
+
+        Per-pair estimators are elementwise in the pair, so recomputing only
+        the invalidated subset is bit-identical to a from-scratch pass.
+        """
+        old_cards = self._edge_cards
+        self.graph = graph
+        if sketch is not None:
+            self.sketch = sketch
+        if (old_cards is None or carry_index is None
+                or int(old_cards.shape[0]) == 0):
+            self._edge_cards = None
+            return None
+        carry = np.asarray(carry_index, dtype=np.int64)
+        if carry.shape[0] == 0:
+            self._edge_cards = jnp.zeros((0,), jnp.float32)
+            return 0
+        recompute = np.nonzero(carry < 0)[0]
+        cards = jnp.take(old_cards, jnp.asarray(np.where(carry < 0, 0, carry)))
+        if recompute.size:
+            # pad the subset to a power-of-two bucket so repeated deltas of
+            # varying size reuse one compiled cardinality program per bucket
+            bucket = pow2_bucket(recompute.size)
+            edges_np = np.asarray(graph.edges)
+            sub_edges = np.zeros((bucket, 2), dtype=edges_np.dtype)
+            sub_edges[:recompute.size] = edges_np[recompute]
+            sub = edge_cardinalities(self.graph, self.sketch, self.plan,
+                                     edges=jnp.asarray(sub_edges))
+            cards = cards.at[jnp.asarray(recompute)].set(
+                sub[:recompute.size])
+        self._edge_cards = cards
+        return int(recompute.size)
+
     def stats(self) -> dict:
         sk = self.sketch
         return {
@@ -236,7 +281,7 @@ class MiningSession:
             "sketch": sk.kind if sk is not None else "exact",
             "sketch_bytes": int(sk.data.size * sk.data.dtype.itemsize)
             if sk is not None else 0,
-            "plan": self.plan,
+            "plan": dataclasses.asdict(self.plan),
         }
 
 

@@ -49,6 +49,16 @@ class EnginePlan:
         return dataclasses.replace(self, **overrides)
 
 
+def pow2_bucket(size: int, lo: int = 1) -> int:
+    """Next power of two ≥ max(size, lo).
+
+    The fixed batch shapes that bound XLA recompiles under varying-size work:
+    session cache refresh, streaming sketch inserts/rebuilds, and query-server
+    batches all pad to these buckets.
+    """
+    return max(lo, 1 << (max(int(size), 1) - 1).bit_length())
+
+
 def plan_for(graph: Graph, sketch: Optional[SketchSet] = None,
              **overrides) -> EnginePlan:
     """Heuristic default plan for a (graph, sketch) pair.

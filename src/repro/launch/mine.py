@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import json
 import os
 import sys
 import time
@@ -167,6 +168,14 @@ def main():
         print(f"session: sketch={sketch_bytes/1e6:.2f}MB build={build_s:.2f}s")
         for name, (val, secs) in res.items():
             print(f"  {name:8s} = {val:<12.4g} ({secs:.2f}s)")
+        # machine-readable twin of the human output (one JSON line)
+        print(json.dumps({
+            "event": "mine_session", "n": g.n, "m": g.m, "d_max": g.d_max,
+            "budget": args.budget, "use_kernel": args.use_kernel,
+            "sketch_bytes": sketch_bytes, "build_s": build_s,
+            "algos": {name: {"value": val, "seconds": secs}
+                      for name, (val, secs) in res.items()},
+        }))
         return
 
     ndev = len(jax.devices())

@@ -1,0 +1,28 @@
+"""Streaming graph subsystem: incremental sketch maintenance + serving.
+
+The batch engine (``repro.engine``) answers many queries over one frozen
+graph; this package makes the graph itself mutable without giving up the
+sketches. Bloom inserts are monotone ORs and MinHash/KMV inserts are
+min-merges, so edge deltas are absorbed incrementally (bit-identical to a
+from-scratch rebuild); deletions mark rows dirty and are repaired by
+selective rebuild under an error-budget policy driven by the paper's own
+accuracy bounds.
+
+    from repro.stream import stream_session, BatchedQueryServer
+    st = stream_session(graph, "bf", storage_budget=0.25)
+    st.apply_delta(inserts=new_edges, deletes=gone_edges)
+    server = BatchedQueryServer(st)
+    rid = server.submit_similarity(pairs, "jaccard")
+    answer = server.flush()[rid]          # .value, .latency_s, .staleness
+"""
+from .dynamic_graph import DeltaResult, DynamicGraph
+from .maintenance import STRICT_POLICY, ErrorBudgetPolicy, SketchMaintainer
+from .server import BatchedQueryServer, QueryResult
+from .session import StreamSession, stream_session
+
+__all__ = [
+    "DeltaResult", "DynamicGraph",
+    "ErrorBudgetPolicy", "SketchMaintainer", "STRICT_POLICY",
+    "BatchedQueryServer", "QueryResult",
+    "StreamSession", "stream_session",
+]

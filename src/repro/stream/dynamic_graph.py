@@ -1,0 +1,264 @@
+"""Mutable graph store for the streaming subsystem.
+
+``DynamicGraph`` owns the same CSR + padded-adjacency representation as the
+frozen :class:`repro.core.graph.Graph`, but host-side (numpy) and mutable:
+adjacency rows carry *headroom* slots so a batched ``apply_delta`` usually
+edits rows in place instead of reallocating, and ``snapshot()`` materializes
+a device ``Graph`` that is bit-identical to ``from_edge_array`` on the same
+edge set — so every batch-mode algorithm, sketch builder, and engine plan
+runs unchanged on the evolving graph.
+
+The vertex set [0, n) is fixed; edges arrive and depart in batches. Edge
+identity is the canonical key ``lo·n + hi`` (u < v), kept as one sorted
+int64 array so delta application and carry-index computation are pure
+vectorized set algebra (SISA's framing: updates are set operations too).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph, canonical_edge_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaResult:
+    """What one ``apply_delta`` actually changed (post-canonicalization).
+
+    Attributes:
+      inserted: int64[I, 2]  newly present edges (u < v).
+      deleted:  int64[D, 2]  removed edges (u < v).
+      touched:  int64[T]     sorted unique vertices with any adjacency change.
+      dirty:    int64[Dv]    sorted unique vertices that *lost* a neighbor
+                             (their sketches cannot be updated monotonically).
+      version:  graph version after this delta.
+    """
+
+    inserted: np.ndarray
+    deleted: np.ndarray
+    touched: np.ndarray
+    dirty: np.ndarray
+    version: int
+
+    @property
+    def is_noop(self) -> bool:
+        return self.inserted.size == 0 and self.deleted.size == 0
+
+    def insert_rows(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-vertex new-neighbor lists, padded for batched device updates.
+
+        Returns ``(verts int32[T], new int32[T, L])`` where row i holds the
+        neighbors vertex ``verts[i]`` gained, sorted ascending, padded with
+        the sentinel ``n`` — the shape incremental sketch maintenance eats.
+        """
+        if self.inserted.size == 0:
+            return (np.zeros(0, dtype=np.int32),
+                    np.zeros((0, 1), dtype=np.int32))
+        src = np.concatenate([self.inserted[:, 0], self.inserted[:, 1]])
+        dst = np.concatenate([self.inserted[:, 1], self.inserted[:, 0]])
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        verts, start = np.unique(src, return_index=True)
+        counts = np.diff(np.append(start, src.size))
+        padded = np.full((verts.size, int(counts.max())), n, dtype=np.int32)
+        for i, (s, c) in enumerate(zip(start, counts)):
+            padded[i, :c] = dst[s:s + c]
+        return verts.astype(np.int32), padded
+
+
+class DynamicGraph:
+    """Mutable undirected graph on a fixed vertex set with batched deltas."""
+
+    def __init__(self, n: int, edge_keys: np.ndarray, deg: np.ndarray,
+                 adj: np.ndarray, headroom: float = 1.5, version: int = 0):
+        self.n = int(n)
+        self.edge_keys = edge_keys        # sorted int64[m], key = lo*n + hi
+        self.deg = deg                    # int32[n]
+        self.adj = adj                    # int32[n, cap]; rows sorted, pad = n
+        self.headroom = float(headroom)
+        self.version = int(version)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_edges(cls, n: int, edges, headroom: float = 1.5,
+                   min_width: int = 4) -> "DynamicGraph":
+        keys = canonical_edge_keys(n, edges)
+        deg, adj = _build_adjacency(n, keys, headroom, min_width)
+        return cls(n, keys, deg, adj, headroom)
+
+    @classmethod
+    def from_graph(cls, graph: Graph, headroom: float = 1.5) -> "DynamicGraph":
+        return cls.from_edges(graph.n, np.asarray(graph.edges),
+                              headroom=headroom)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return int(self.edge_keys.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.adj.shape[1])
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.adj[v, :self.deg[v]]
+
+    def edge_array(self) -> np.ndarray:
+        """int64[m, 2] canonical (u < v) edges in key order."""
+        return _decode_keys(self.n, self.edge_keys)
+
+    def snapshot(self) -> Graph:
+        """Device ``Graph`` of the current state — bit-identical (arrays and
+        static fields) to ``from_edge_array(n, self.edge_array())``.
+
+        Every numpy buffer handed to jax is a fresh copy: ``jnp.asarray`` of
+        a host array can be zero-copy on CPU, and ``self.adj``/``self.deg``
+        are mutated in place by later deltas — an aliased device view would
+        change under any still-in-flight async computation.
+        """
+        n = self.n
+        d_max = max(int(self.deg.max()) if n else 0, 1)
+        mask = np.arange(self.capacity)[None, :] < self.deg[:, None]
+        indices = self.adj[mask].astype(np.int32)      # row-major == CSR order
+        indptr = np.zeros(n + 1, dtype=np.int32)
+        np.cumsum(self.deg, out=indptr[1:])
+        adj = self.adj[:, :d_max] if self.capacity >= d_max else np.pad(
+            self.adj, ((0, 0), (0, d_max - self.capacity)), constant_values=n)
+        return Graph(
+            indptr=jnp.asarray(indptr),
+            indices=jnp.asarray(indices),
+            adj=jnp.asarray(np.array(adj, copy=True)),
+            deg=jnp.asarray(self.deg.copy()),
+            edges=jnp.asarray(self.edge_array().astype(np.int32)),
+            n_vertices=n, n_edges=self.m, d_max=d_max)
+
+    # ------------------------------------------------------------------
+    # mutation
+    # ------------------------------------------------------------------
+
+    def apply_delta(self, inserts=None, deletes=None) -> DeltaResult:
+        """Apply one batch of edge insertions and deletions.
+
+        Both arguments are (possibly duplicated / both-direction / already
+        present or absent) edge arrays; the applied delta is canonicalized:
+        deletes that miss and inserts that already exist are dropped.
+        Deletes are applied before inserts, so an edge listed in both ends
+        up present (and both endpoints count as dirty).
+        """
+        n = self.n
+        cur = self.edge_keys
+        del_req = canonical_edge_keys(n, deletes)
+        del_applied = del_req[np.isin(del_req, cur, assume_unique=True)]
+        kept = (cur[~np.isin(cur, del_applied, assume_unique=True)]
+                if del_applied.size else cur)
+        ins_req = canonical_edge_keys(n, inserts)
+        ins_applied = (ins_req[~np.isin(ins_req, kept, assume_unique=True)]
+                       if ins_req.size else ins_req)
+
+        ins_uv = _decode_keys(n, ins_applied)
+        del_uv = _decode_keys(n, del_applied)
+        self.version += 1
+        if ins_applied.size == 0 and del_applied.size == 0:
+            return DeltaResult(ins_uv, del_uv, np.zeros(0, np.int64),
+                               np.zeros(0, np.int64), self.version)
+
+        self.edge_keys = np.union1d(kept, ins_applied)
+        touched = np.unique(np.concatenate([ins_uv.ravel(), del_uv.ravel()]))
+        dirty = np.unique(del_uv.ravel())
+
+        new_deg = self.deg.astype(np.int64)
+        if ins_uv.size:
+            new_deg += np.bincount(ins_uv.ravel(), minlength=n)
+        if del_uv.size:
+            new_deg -= np.bincount(del_uv.ravel(), minlength=n)
+        need = int(new_deg.max())
+        if need > self.capacity:
+            # grow with headroom so a run of inserts amortizes reallocation
+            cap = max(need, int(math.ceil(need * self.headroom)))
+            grown = np.full((n, cap), n, dtype=np.int32)
+            grown[:, :self.capacity] = self.adj
+            self.adj = grown
+
+        add = _partner_lists(ins_uv)
+        drop = _partner_lists(del_uv)
+        for v in touched:
+            nbrs = self.adj[v, :self.deg[v]]
+            if v in drop:
+                nbrs = nbrs[~np.isin(nbrs, drop[v])]
+            if v in add:
+                nbrs = np.concatenate([nbrs, add[v]])
+            nbrs = np.sort(nbrs)
+            self.adj[v, :nbrs.size] = nbrs
+            self.adj[v, nbrs.size:] = n
+        self.deg = new_deg.astype(np.int32)
+        return DeltaResult(ins_uv, del_uv, touched, dirty, self.version)
+
+    def carry_index(self, old_keys: np.ndarray,
+                    invalid_vertices: np.ndarray) -> Optional[np.ndarray]:
+        """Map current edges to their row in a previous edge order.
+
+        Returns int64[m] where entry j is the position of edge j in
+        ``old_keys`` (a previous sorted ``edge_keys``) when neither endpoint
+        is in ``invalid_vertices``, else -1 — exactly the
+        ``MiningSession.refresh`` carry contract.
+        """
+        new_keys = self.edge_keys
+        if self.n == 0 or new_keys.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        if old_keys.size == 0:
+            return np.full(new_keys.shape[0], -1, dtype=np.int64)
+        pos = np.searchsorted(old_keys, new_keys)
+        pos_c = np.minimum(pos, old_keys.size - 1)
+        found = old_keys[pos_c] == new_keys
+        bad = np.zeros(self.n, dtype=bool)
+        bad[np.asarray(invalid_vertices, dtype=np.int64)] = True
+        lo, hi = new_keys // self.n, new_keys % self.n
+        return np.where(found & ~bad[lo] & ~bad[hi], pos_c, -1).astype(np.int64)
+
+
+# ----------------------------------------------------------------------------
+# host helpers
+# ----------------------------------------------------------------------------
+
+
+
+def _decode_keys(n: int, keys: np.ndarray) -> np.ndarray:
+    if keys.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    return np.stack([keys // n, keys % n], axis=1)
+
+
+def _partner_lists(uv: np.ndarray) -> dict:
+    out: dict = {}
+    for u, v in uv:
+        out.setdefault(int(u), []).append(int(v))
+        out.setdefault(int(v), []).append(int(u))
+    return {v: np.asarray(ps, dtype=np.int32) for v, ps in out.items()}
+
+
+def _build_adjacency(n: int, keys: np.ndarray, headroom: float,
+                     min_width: int) -> Tuple[np.ndarray, np.ndarray]:
+    uv = _decode_keys(n, keys)
+    src = np.concatenate([uv[:, 0], uv[:, 1]])
+    dst = np.concatenate([uv[:, 1], uv[:, 0]])
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    deg = np.bincount(src, minlength=n).astype(np.int32)
+    d_max = int(deg.max()) if n else 0
+    cap = max(min_width, int(math.ceil(max(d_max, 1) * headroom)))
+    adj = np.full((n, cap), n, dtype=np.int32)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    col = np.arange(src.size) - indptr[src]
+    adj[src.astype(np.int64), col] = dst.astype(np.int32)
+    return deg, adj

@@ -1,0 +1,231 @@
+"""Streaming mining session: DynamicGraph + sketch maintenance + engine.
+
+A :class:`StreamSession` is the long-lived counterpart of the batch
+``engine.MiningSession``: it owns a mutable :class:`DynamicGraph`, keeps one
+sketch current through :class:`SketchMaintainer`, and holds a MiningSession
+whose per-edge cardinality cache is *delta-aware* — after ``apply_delta``
+only cardinalities of edges incident to touched (or policy-rebuilt) vertices
+are recomputed; everything else is carried over by index. Under the strict
+(default) error-budget policy every answer is bit-identical to a
+from-scratch ``engine.session`` on the equivalent static graph.
+
+Snapshot/restore goes through ``repro.checkpoint.store`` (atomic publish,
+bounded retention), so a serving process can resume mid-stream.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import store
+from ..core.sketches import SketchSet, bloom_membership
+from ..engine.engine import MiningSession, resolve_plan
+from ..engine.plan import EnginePlan
+from .dynamic_graph import DynamicGraph
+from .maintenance import ErrorBudgetPolicy, SketchMaintainer
+
+
+class StreamSession:
+    """Interleaved mutation + query serving over one maintained sketch."""
+
+    def __init__(self, dyn: DynamicGraph, kind: Optional[str] = "bf",
+                 storage_budget: float = 0.25, num_hashes: int = 2,
+                 seed: int = 0, words: Optional[int] = None,
+                 k: Optional[int] = None,
+                 policy: Optional[ErrorBudgetPolicy] = None,
+                 plan: Optional[EnginePlan] = None,
+                 sketch_data=None, **plan_kw):
+        self.dyn = dyn
+        self.maintainer = None if kind is None else SketchMaintainer(
+            dyn, kind, storage_budget=storage_budget, num_hashes=num_hashes,
+            seed=seed, words=words, k=k, policy=policy, data=sketch_data)
+        graph = dyn.snapshot()
+        sketch = self.maintainer.sketch if self.maintainer else None
+        self.session = MiningSession(
+            graph, sketch, resolve_plan(plan, graph, sketch, plan_kw))
+        self.version = 0
+        self.cards_recomputed = 0
+        self.cards_carried = 0
+        self.extra = {}            # restore() fills this from the checkpoint
+
+    # ------------------------------------------------------------------
+    # mutation
+    # ------------------------------------------------------------------
+
+    @property
+    def graph(self):
+        return self.session.graph
+
+    @property
+    def sketch(self) -> Optional[SketchSet]:
+        return self.maintainer.sketch if self.maintainer else None
+
+    def apply_delta(self, inserts=None, deletes=None) -> dict:
+        """Apply one edge-delta batch: mutate the graph, maintain the sketch
+        incrementally, and refresh only the invalidated session caches."""
+        old_keys = self.dyn.edge_keys
+        delta = self.dyn.apply_delta(inserts, deletes)
+        rebuilt = (self.maintainer.apply(delta)
+                   if self.maintainer else np.zeros(0, np.int64))
+        graph = self.dyn.snapshot()
+        # a row rebuilt this delta may have gone dirty at an *earlier* delta
+        # (policy deferral), so invalidation covers touched ∪ rebuilt
+        invalid = np.union1d(delta.touched, rebuilt)
+        carry = self.dyn.carry_index(old_keys, invalid)
+        recomputed = self.session.refresh(
+            graph, self.maintainer.sketch if self.maintainer else None, carry)
+        self.version += 1
+        # refresh returns None when it dropped the cache (nothing carried;
+        # the full pass happens lazily) — don't count that as savings
+        rec = 0 if recomputed is None else recomputed
+        car = 0 if recomputed is None else max(graph.m - recomputed, 0)
+        self.cards_recomputed += rec
+        self.cards_carried += car
+        return {
+            "version": self.version,
+            "inserted": int(delta.inserted.shape[0]),
+            "deleted": int(delta.deleted.shape[0]),
+            "touched": int(delta.touched.shape[0]),
+            "rows_rebuilt_now": int(rebuilt.size),
+            "cards_recomputed": rec,
+            "cards_carried": car,
+        }
+
+    def flush(self) -> int:
+        """Force-rebuild all dirty sketch rows and refresh their edges —
+        makes subsequent answers exact w.r.t. the current graph even under a
+        lazy error-budget policy."""
+        if self.maintainer is None:
+            return 0
+        rebuilt = self.maintainer.flush()
+        if rebuilt.size:
+            carry = self.dyn.carry_index(self.dyn.edge_keys, rebuilt)
+            self.session.refresh(self.dyn.snapshot(), self.maintainer.sketch,
+                                 carry)
+        return int(rebuilt.size)
+
+    # ------------------------------------------------------------------
+    # queries (the batch engine's surface, served on the live graph)
+    # ------------------------------------------------------------------
+
+    def triangle_count(self) -> jax.Array:
+        return self.session.triangle_count()
+
+    def local_clustering(self) -> jax.Array:
+        return self.session.local_clustering()
+
+    def similarity(self, pairs, measure: str = "jaccard") -> jax.Array:
+        return self.session.similarity(jnp.asarray(pairs), measure)
+
+    def membership(self, u: int, candidates) -> jax.Array:
+        """Is each candidate a neighbor of u? BF answers from the sketch row
+        (the paper's membership primitive); other kinds answer exactly."""
+        sk = self.sketch
+        cand = jnp.asarray(np.asarray(candidates, dtype=np.int32))
+        if sk is not None and sk.kind == "bf":
+            return bloom_membership(sk.data[u], cand, self.dyn.n,
+                                    sk.num_hashes, sk.total_bits, sk.seed)
+        return jnp.asarray(np.isin(np.asarray(candidates),
+                                   self.dyn.neighbors(u)))
+
+    def stats(self) -> dict:
+        out = {
+            "version": self.version,
+            "n": self.dyn.n, "m": self.dyn.m,
+            "cards_recomputed": self.cards_recomputed,
+            "cards_carried": self.cards_carried,
+        }
+        if self.maintainer is not None:
+            out["maintenance"] = self.maintainer.stats()
+        return out
+
+    # ------------------------------------------------------------------
+    # snapshot / restore through checkpoint.store
+    # ------------------------------------------------------------------
+
+    def _config(self, extra: Optional[dict] = None) -> dict:
+        cfg = {"kind": None, "headroom": self.dyn.headroom,
+               "extra": extra or {}}
+        if self.maintainer is not None:
+            mt = self.maintainer
+            cfg.update(kind=mt.kind, num_hashes=mt.num_hashes, seed=mt.seed,
+                       words=mt.words, k=mt.k,
+                       policy={"rel_tolerance": mt.policy.rel_tolerance,
+                               "confidence": mt.policy.confidence,
+                               "max_stale": mt.policy.max_stale})
+        return cfg
+
+    def save(self, directory: str, step: Optional[int] = None,
+             keep: int = 3, extra: Optional[dict] = None) -> str:
+        """Atomic snapshot of the full dynamic state (graph + sketch +
+        dirty/stale bookkeeping) via checkpoint.store. ``extra`` is an
+        arbitrary JSON-able dict the caller can validate at restore time
+        (e.g. the replay driver's stream parameters)."""
+        step = self.version if step is None else int(step)
+        tree = {
+            "config": np.frombuffer(
+                json.dumps(self._config(extra)).encode(),
+                dtype=np.uint8).copy(),
+            "n": np.int64(self.dyn.n),
+            "version": np.int64(self.version),
+            "edge_keys": self.dyn.edge_keys,
+            "deg": self.dyn.deg,
+            "adj": self.dyn.adj,
+        }
+        if self.maintainer is not None:
+            mt = self.maintainer
+            tree.update(sketch=np.asarray(mt.sketch.data), dirty=mt.dirty,
+                        stale=mt.stale,
+                        counters=np.asarray([mt.rows_incremental,
+                                             mt.rows_rebuilt,
+                                             mt.deltas_applied], np.int64))
+        return store.save_checkpoint(directory, step, tree, keep=keep)
+
+    @classmethod
+    def restore(cls, directory: str, step: Optional[int] = None,
+                plan: Optional[EnginePlan] = None, **plan_kw) -> "StreamSession":
+        if step is None:
+            step = store.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {directory}")
+        meta = store.load_meta(directory, step)
+        target = {key: jax.ShapeDtypeStruct(tuple(leaf["shape"]),
+                                            np.dtype(leaf["dtype"]))
+                  for key, leaf in meta["leaves"].items()}
+        tree = {key: np.asarray(val)
+                for key, val in store.restore_checkpoint(
+                    directory, step, target).items()}
+        cfg = json.loads(bytes(tree["config"]).decode())
+        dyn = DynamicGraph(int(tree["n"]), tree["edge_keys"].astype(np.int64),
+                           tree["deg"].astype(np.int32),
+                           tree["adj"].astype(np.int32),
+                           headroom=cfg["headroom"])
+        policy = (ErrorBudgetPolicy(**cfg["policy"])
+                  if cfg.get("policy") else None)
+        self = cls(dyn, kind=cfg["kind"], num_hashes=cfg.get("num_hashes", 2),
+                   seed=cfg.get("seed", 0), words=cfg.get("words") or None,
+                   k=cfg.get("k") or None, policy=policy, plan=plan,
+                   sketch_data=(jnp.asarray(tree["sketch"])
+                                if cfg["kind"] else None), **plan_kw)
+        self.version = int(tree["version"])
+        self.extra = cfg.get("extra") or {}
+        if self.maintainer is not None:
+            mt = self.maintainer
+            mt.dirty = tree["dirty"].astype(bool)
+            mt.stale = tree["stale"].astype(np.int64)
+            mt.rows_incremental, mt.rows_rebuilt, mt.deltas_applied = (
+                int(x) for x in tree["counters"])
+        return self
+
+
+def stream_session(graph_or_dyn, kind: Optional[str] = "bf",
+                   **kwargs) -> StreamSession:
+    """Open a streaming session over a Graph or DynamicGraph (the streaming
+    twin of ``engine.session``)."""
+    dyn = (graph_or_dyn if isinstance(graph_or_dyn, DynamicGraph)
+           else DynamicGraph.from_graph(graph_or_dyn))
+    return StreamSession(dyn, kind=kind, **kwargs)

@@ -1,0 +1,55 @@
+"""Graph model regressions: empty graphs, generator edge distributions."""
+import numpy as np
+
+from repro.core import graph as G
+
+
+def test_from_edge_array_n0_returns_valid_empty_graph():
+    # regression: the dedupe key lo*n+hi used to divide by n on the way out
+    g = G.from_edge_array(0, np.zeros((0, 2), dtype=np.int64))
+    assert g.n == 0 and g.m == 0
+    assert np.asarray(g.indptr).shape == (1,)
+    assert np.asarray(g.edges).shape == (0, 2)
+    assert np.asarray(g.deg).shape == (0,)
+    assert g.adj.shape == (0, 1) and g.d_max == 1
+
+
+def test_from_edge_array_n0_drops_out_of_range_edges():
+    g = G.from_edge_array(0, np.array([[0, 1], [1, 0]]))
+    assert g.n == 0 and g.m == 0
+
+
+def test_from_edge_array_no_valid_edges():
+    g = G.from_edge_array(5, np.array([[2, 2], [3, 3]]))   # only self loops
+    assert g.n == 5 and g.m == 0
+    assert np.asarray(g.deg).sum() == 0
+
+
+def test_erdos_renyi_empty_cases():
+    assert G.erdos_renyi(0, 0.5).m == 0
+    assert G.erdos_renyi(1, 0.5).m == 0
+    assert G.erdos_renyi(100, 0.0).m == 0
+
+
+def test_triu_unrank_exhaustive():
+    for n in (2, 3, 7, 40):
+        iu = np.triu_indices(n, k=1)
+        u, v = G._triu_unrank(np.arange(n * (n - 1) // 2), n)
+        assert np.array_equal(u, iu[0]) and np.array_equal(v, iu[1])
+
+
+def test_erdos_renyi_large_n_geometric_skipping():
+    # n chosen so max_pairs > 4M triggers the sparse branch; the old
+    # with-replacement sampler silently dropped duplicates/self-loops and
+    # undershot p — geometric skipping realizes Binomial(max_pairs, p)
+    n, p = 3000, 0.0005
+    max_pairs = n * (n - 1) // 2
+    assert max_pairs > 4_000_000
+    counts = [G.erdos_renyi(n, p, seed=s).m for s in range(3)]
+    mean, sigma = p * max_pairs, np.sqrt(p * (1 - p) * max_pairs)
+    for m in counts:
+        assert abs(m - mean) < 6 * sigma, (m, mean, sigma)
+    g = G.erdos_renyi(n, p, seed=0)
+    e = np.asarray(g.edges)
+    assert (e[:, 0] < e[:, 1]).all()                 # canonical, no self loops
+    assert e[:, 1].max() < n

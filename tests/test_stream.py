@@ -1,0 +1,339 @@
+"""Streaming subsystem: dynamic graph deltas, incremental sketch maintenance
+(≡ from-scratch rebuild, bit-identical), delta-aware session refresh, the
+batched query server, and snapshot/restore."""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # minimal environments
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import engine as eng
+from repro.core import graph as G, sketches as S
+from repro.stream import (BatchedQueryServer, DynamicGraph, ErrorBudgetPolicy,
+                          StreamSession, stream_session)
+
+KINDS = ("bf", "kh", "1h", "kmv")
+SKETCH_KW = dict(words=4, k=6, num_hashes=2, seed=3)
+
+
+def base_graph(n=90, p=0.07, seed=5):
+    return G.erdos_renyi(n, p, seed=seed)
+
+
+def random_delta(rng, n, dyn, n_ins=20, n_del=6):
+    ins = rng.integers(0, n, size=(n_ins, 2))
+    cur = dyn.edge_array()
+    dels = (cur[rng.choice(cur.shape[0], size=min(n_del, cur.shape[0]),
+                           replace=False)] if cur.shape[0] else None)
+    return ins, dels
+
+
+def scratch_sketch(dyn, kind):
+    return S.build(G.from_edge_array(dyn.n, dyn.edge_array()), kind,
+                   **SKETCH_KW)
+
+
+# ---------------------------------------------------------------------------
+# DynamicGraph
+# ---------------------------------------------------------------------------
+
+def test_dynamic_snapshot_matches_from_edge_array():
+    g = base_graph()
+    rng = np.random.default_rng(0)
+    dyn = DynamicGraph.from_graph(g)
+    for _ in range(4):
+        dyn.apply_delta(*random_delta(rng, g.n, dyn))
+    snap = dyn.snapshot()
+    ref = G.from_edge_array(g.n, dyn.edge_array())
+    for name in ("indptr", "indices", "adj", "deg", "edges"):
+        np.testing.assert_array_equal(np.asarray(getattr(snap, name)),
+                                      np.asarray(getattr(ref, name)), name)
+    assert (snap.n, snap.m, snap.d_max) == (ref.n, ref.m, ref.d_max)
+
+
+def test_dynamic_delta_canonicalization():
+    dyn = DynamicGraph.from_edges(10, [[0, 1], [1, 2]])
+    # duplicate / reversed / self-loop / already-present inserts collapse
+    d = dyn.apply_delta([[2, 1], [3, 3], [4, 5], [5, 4], [4, 5]], [[9, 8]])
+    assert d.inserted.shape[0] == 1 and d.deleted.shape[0] == 0
+    assert dyn.m == 3
+    d = dyn.apply_delta(None, [[1, 0], [0, 1]])
+    np.testing.assert_array_equal(d.deleted, [[0, 1]])
+    assert dyn.m == 2 and np.array_equal(d.dirty, [0, 1])
+
+
+def test_dynamic_headroom_growth():
+    dyn = DynamicGraph.from_edges(64, [[0, 1]], headroom=1.5)
+    cap0 = dyn.capacity
+    dyn.apply_delta([[0, v] for v in range(2, 40)])
+    assert dyn.capacity > cap0 and dyn.deg[0] == 39
+    np.testing.assert_array_equal(np.sort(dyn.neighbors(0)),
+                                  np.arange(1, 40))
+    ref = G.from_edge_array(64, dyn.edge_array())
+    np.testing.assert_array_equal(np.asarray(dyn.snapshot().adj),
+                                  np.asarray(ref.adj))
+
+
+def test_dynamic_empty_graph_n0():
+    dyn = DynamicGraph.from_edges(0, None)
+    d = dyn.apply_delta([[0, 1]], None)
+    assert d.is_noop and dyn.m == 0
+    assert dyn.snapshot().n == 0
+
+
+# ---------------------------------------------------------------------------
+# incremental maintenance ≡ from-scratch rebuild (bit-identical, all kinds)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_incremental_insert_equals_rebuild(seed):
+    """Property: insert-only maintenance ≡ from-scratch build, every kind.
+
+    (Kinds loop inside the body: the deterministic hypothesis fallback shim
+    wraps properties as zero-arg callables, which parametrize can't feed.)
+    """
+    for kind in KINDS:
+        rng = np.random.default_rng(seed)
+        g = G.erdos_renyi(60, 0.08, seed=seed % 97)
+        s = stream_session(g, kind, policy=ErrorBudgetPolicy(0.0),
+                           **SKETCH_KW)
+        for _ in range(3):
+            s.apply_delta(
+                rng.integers(0, g.n, size=(int(rng.integers(1, 25)), 2)))
+        assert s.maintainer.rows_rebuilt == 0          # inserts never rebuild
+        np.testing.assert_array_equal(
+            np.asarray(s.sketch.data),
+            np.asarray(scratch_sketch(s.dyn, kind).data), kind)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delete_dirty_rebuild_cycle_equals_rebuild(seed):
+    """Property: delete→dirty→selective-rebuild cycles stay bit-identical."""
+    for kind in KINDS:
+        rng = np.random.default_rng(seed)
+        g = G.erdos_renyi(60, 0.12, seed=seed % 89)
+        s = stream_session(g, kind, policy=ErrorBudgetPolicy(0.0),
+                           **SKETCH_KW)
+        for _ in range(3):
+            s.apply_delta(*random_delta(rng, g.n, s.dyn, n_ins=12, n_del=8))
+        assert s.maintainer.stats()["rows_dirty"] == 0    # strict policy
+        assert s.maintainer.rows_rebuilt > 0
+        np.testing.assert_array_equal(
+            np.asarray(s.sketch.data),
+            np.asarray(scratch_sketch(s.dyn, kind).data), kind)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_empty_delta_is_a_noop(kind):
+    s = stream_session(base_graph(), kind, **SKETCH_KW)
+    before = s.sketch.data
+    stats = s.maintainer.stats()
+    info = s.apply_delta(np.zeros((0, 2)), None)
+    assert info["inserted"] == info["deleted"] == 0
+    assert s.sketch.data is before                     # untouched, not rebuilt
+    after = s.maintainer.stats()
+    assert after["rows_incremental"] == stats["rows_incremental"]
+    assert after["rows_rebuilt"] == stats["rows_rebuilt"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_error_budget_defers_then_flush_catches_up(kind):
+    g = G.erdos_renyi(80, 0.1, seed=2)
+    s = stream_session(g, kind, policy=ErrorBudgetPolicy(rel_tolerance=50.0),
+                       **SKETCH_KW)
+    s.apply_delta(None, s.dyn.edge_array()[:6])
+    ms = s.maintainer.stats()
+    # most dirty rows stay deferred (their staleness hides below the sketch's
+    # own error scale); only rows whose degree dropped near 0 — zero error
+    # tolerance — may rebuild immediately
+    assert ms["rows_dirty"] > 0
+    assert ms["rows_rebuilt"] < ms["rows_dirty"] + ms["rows_rebuilt"]
+    assert ms["rows_rebuilt"] <= 2
+    assert ms["stale_total"] > 0
+    s.flush()
+    assert s.maintainer.stats()["rows_dirty"] == 0
+    np.testing.assert_array_equal(np.asarray(s.sketch.data),
+                                  np.asarray(scratch_sketch(s.dyn, kind).data))
+
+
+def test_strict_policy_allows_zero_lazy_allows_more():
+    s = stream_session(base_graph(), "bf", **SKETCH_KW)
+    deg = np.asarray([4, 16, 64])
+    assert (ErrorBudgetPolicy(0.0).allowed_stale(s.sketch, deg) == 0).all()
+    lazy = ErrorBudgetPolicy(rel_tolerance=1.0).allowed_stale(s.sketch, deg)
+    assert (lazy > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# delta-aware session refresh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS + (None,))
+def test_session_refresh_matches_from_scratch(kind):
+    g = base_graph(n=120, p=0.06)
+    kw = SKETCH_KW if kind else {}
+    s = stream_session(g, kind, **kw)
+    _ = s.session.edge_cardinalities()                 # populate the cache
+    rng = np.random.default_rng(7)
+    total_recomputed = 0
+    for _ in range(4):
+        info = s.apply_delta(*random_delta(rng, g.n, s.dyn, n_ins=10, n_del=3))
+        total_recomputed += info["cards_recomputed"]
+        assert info["cards_recomputed"] < s.dyn.m      # never the full pass
+        gs = G.from_edge_array(g.n, s.dyn.edge_array())
+        sk = S.build(gs, kind, **SKETCH_KW) if kind else None
+        ref = np.asarray(eng.edge_cardinalities(gs, sk, s.session.plan))
+        np.testing.assert_array_equal(
+            np.asarray(s.session.edge_cardinalities()), ref)
+    assert total_recomputed > 0
+
+
+def test_refresh_drop_semantics():
+    g = base_graph()
+    sess = eng.session(g, "bf", storage_budget=0.3)
+    _ = sess.edge_cardinalities()
+    assert sess.refresh(g) is None                     # carry=None drops cache
+    assert sess._edge_cards is None
+    assert float(sess.triangle_count()) > 0            # lazily recomputed
+
+
+def test_stream_stats_do_not_count_dropped_cache_as_carried():
+    g = base_graph()
+    s = stream_session(g, "bf", **SKETCH_KW)           # no cache warm-up
+    info = s.apply_delta([[0, 1], [2, 3]])
+    assert info["cards_recomputed"] == 0 and info["cards_carried"] == 0
+    assert s.cards_carried == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end replay: ≥10 deltas, answers ≡ static session, rebuilds ≪ n
+# ---------------------------------------------------------------------------
+
+def test_replay_matches_static_session_every_batch():
+    n_batches = 10
+    g = G.kronecker(8, 6, seed=4)
+    rng = np.random.default_rng(0)
+    edges = np.asarray(g.edges)
+    order = rng.permutation(edges.shape[0])
+    split = int(0.7 * edges.shape[0])
+    dyn = DynamicGraph.from_edges(g.n, edges[order[:split]])
+    s = StreamSession(dyn, "bf", **SKETCH_KW)
+    _ = s.session.edge_cardinalities()
+    chunks = np.array_split(edges[order[split:]], n_batches)
+    qpairs = rng.integers(0, g.n, size=(32, 2)).astype(np.int32)
+    for b in range(n_batches):
+        cur = dyn.edge_array()
+        dels = cur[rng.choice(cur.shape[0], size=4, replace=False)]
+        s.apply_delta(chunks[b], dels)
+        gs = G.from_edge_array(g.n, dyn.edge_array())
+        static = eng.session(gs, S.build(gs, "bf", **SKETCH_KW),
+                             plan=s.session.plan)
+        assert float(s.triangle_count()) == float(static.triangle_count())
+        np.testing.assert_array_equal(
+            np.asarray(s.similarity(qpairs, "jaccard")),
+            np.asarray(static.similarity(jnp.asarray(qpairs), "jaccard")))
+    # incremental maintenance must have avoided full rebuilds: over the whole
+    # replay only deletion-dirty rows were rebuilt, a sliver of n per delta
+    assert s.maintainer.rows_rebuilt <= n_batches * 8 < g.n
+    assert s.maintainer.rows_incremental > 0
+
+
+# ---------------------------------------------------------------------------
+# batched query server
+# ---------------------------------------------------------------------------
+
+def test_server_batched_answers_match_direct():
+    g = base_graph(n=100)
+    s = stream_session(g, "bf", **SKETCH_KW)
+    srv = BatchedQueryServer(s)
+    rng = np.random.default_rng(3)
+    pairs_a = rng.integers(0, g.n, size=(9, 2)).astype(np.int32)
+    pairs_b = rng.integers(0, g.n, size=(23, 2)).astype(np.int32)
+    ra = srv.submit_similarity(pairs_a, "jaccard")
+    rb = srv.submit_similarity(pairs_b, "common")
+    rm = srv.submit_membership(7, np.arange(25))
+    rt = srv.submit_triangle_count()
+    rl = srv.submit_link_prediction(11, top_k=3)
+    assert srv.pending_count() == 5
+    res = srv.flush()
+    assert srv.pending_count() == 0
+    np.testing.assert_array_equal(res[ra].value,
+                                  np.asarray(s.similarity(pairs_a, "jaccard")))
+    np.testing.assert_array_equal(res[rb].value,
+                                  np.asarray(s.similarity(pairs_b, "common")))
+    np.testing.assert_array_equal(res[rm].value,
+                                  np.asarray(s.membership(7, np.arange(25))))
+    assert res[rt].value == float(s.triangle_count())
+    assert res[rl].value["candidates"].shape[0] <= 3
+    assert all(r.latency_s >= 0 and r.staleness == 0 for r in res.values())
+
+
+def test_server_staleness_counts_interleaved_deltas():
+    g = base_graph()
+    s = stream_session(g, "bf", **SKETCH_KW)
+    srv = BatchedQueryServer(s)
+    rid_old = srv.submit_triangle_count()
+    s.apply_delta([[0, 1], [2, 3]])
+    s.apply_delta([[4, 5]])
+    rid_new = srv.submit_triangle_count()
+    res = srv.flush()
+    assert res[rid_old].staleness == 2 and res[rid_new].staleness == 0
+    stats = srv.stats()
+    assert stats["served"] == 2 and stats["flushes"] == 1
+
+
+def test_server_membership_finds_live_neighbors():
+    s = stream_session(base_graph(), "bf", **SKETCH_KW)
+    s.apply_delta([[0, 50], [0, 51]])
+    srv = BatchedQueryServer(s)
+    rid = srv.submit_membership(0, [50, 51])
+    got = srv.flush()[rid].value
+    assert got.all()                         # BF: no false negatives, ever
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore through checkpoint.store
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["bf", "kmv"])
+def test_checkpoint_roundtrip(tmp_path, kind):
+    rng = np.random.default_rng(11)
+    s = stream_session(base_graph(), kind,
+                       policy=ErrorBudgetPolicy(rel_tolerance=50.0),
+                       **SKETCH_KW)
+    for _ in range(3):
+        s.apply_delta(*random_delta(rng, s.dyn.n, s.dyn))
+    path = s.save(str(tmp_path))
+    assert "step_" in path
+    r = StreamSession.restore(str(tmp_path))
+    assert r.version == s.version and r.dyn.m == s.dyn.m
+    np.testing.assert_array_equal(r.dyn.edge_keys, s.dyn.edge_keys)
+    np.testing.assert_array_equal(r.dyn.adj, s.dyn.adj)
+    np.testing.assert_array_equal(np.asarray(r.sketch.data),
+                                  np.asarray(s.sketch.data))
+    np.testing.assert_array_equal(r.maintainer.dirty, s.maintainer.dirty)
+    np.testing.assert_array_equal(r.maintainer.stale, s.maintainer.stale)
+    assert float(r.triangle_count()) == float(s.triangle_count())
+    # the restored session keeps streaming correctly
+    r.apply_delta([[1, 2], [3, 4]])
+    r.flush()
+    np.testing.assert_array_equal(np.asarray(r.sketch.data),
+                                  np.asarray(scratch_sketch(r.dyn, kind).data))
+
+
+# ---------------------------------------------------------------------------
+# satellite: session stats are JSON-serializable
+# ---------------------------------------------------------------------------
+
+def test_session_stats_json_serializable():
+    sess = eng.session(base_graph(), "bf", storage_budget=0.3)
+    blob = json.dumps(sess.stats())
+    plan = json.loads(blob)["plan"]
+    assert plan["edge_chunk"] > 0 and "use_kernel" in plan
