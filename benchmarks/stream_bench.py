@@ -2,8 +2,10 @@
 
 Measures (a) the incremental win — absorbing an edge-delta batch through
 per-row sketch merges + selective rebuild vs the full O(b·Σd_v) from-scratch
-build a static pipeline would need, (b) delta-aware session refresh vs a
-full per-edge cardinality pass, and (c) batched query-server throughput.
+build a static pipeline would need, (b) host → device traffic per delta (the
+device-resident contract: bytes scale with the delta, not with n·d_max+m)
+and the before/after cost of the per-delta snapshot the device-resident
+path eliminated, and (c) batched query-server throughput.
 """
 from __future__ import annotations
 
@@ -50,19 +52,44 @@ def run(scale: int = 11, budget: float = 0.5, batch_edges: int = 128):
     jax.block_until_ready(full_rebuild())
     us_full = (time.perf_counter() - t0) * 1e6
 
+    # deletes are drawn once without replacement and partitioned so batches
+    # never target an already-deleted edge (a repeat would canonicalize to a
+    # no-op and shrink the measured delta)
+    cur = st.dyn.edge_array()
+    n_del = batch_edges // 8
+    del_idx = rng.choice(cur.shape[0], size=8 * n_del, replace=False)
     batches = []
     for b in range(8):
         ins = edges[order[split + b * batch_edges:
                           split + (b + 1) * batch_edges]]
-        cur = st.dyn.edge_array()
-        dels = cur[rng.choice(cur.shape[0], size=batch_edges // 8,
-                              replace=False)]
+        dels = cur[del_idx[b * n_del:(b + 1) * n_del]]
         batches.append((ins, dels))
     us_delta = _time_deltas(st, batches) * 1e6
-    ms = st.stats()["maintenance"]
+    stats = st.stats()
+    ms = stats["maintenance"]
+    tr = stats["traffic"]
     emit(f"stream_delta_s{scale}_e{batch_edges}", us_delta,
          f"full_rebuild_us={us_full:.1f};speedup={us_full / us_delta:.2f}x;"
-         f"rows_rebuilt={ms['rows_rebuilt']};incr={ms['rows_incremental']}")
+         f"rows_rebuilt={ms['rows_rebuilt']};incr={ms['rows_incremental']};"
+         f"bytes_per_delta={tr['bytes_per_delta_mean']:.0f}")
+
+    # the device-resident win itself: bytes a delta uploads vs what the
+    # killed per-delta snapshot paid (the actual arrays a snapshot ships),
+    # plus the wall-clock the old snapshot-per-delta path would add back
+    t0 = time.perf_counter()
+    for _ in range(4):
+        snap = st.dyn.snapshot()
+        jax.block_until_ready(snap.adj)
+    us_snapshot = (time.perf_counter() - t0) / 4 * 1e6
+    full_bytes = sum(
+        np.asarray(getattr(snap, f)).nbytes
+        for f in ("indptr", "indices", "adj", "deg", "edges"))
+    emit(f"stream_traffic_s{scale}_e{batch_edges}",
+         tr["bytes_per_delta_mean"],
+         f"full_upload_bytes={full_bytes};"
+         f"traffic_ratio={full_bytes / max(tr['bytes_per_delta_mean'], 1):.1f}x;"
+         f"snapshot_us={us_snapshot:.1f};"
+         f"delta_vs_old_snapshot={(us_delta + us_snapshot) / us_delta:.2f}x")
 
     # batched query serving throughput: flushes of 8 requests × 128 pairs
     server = BatchedQueryServer(st)

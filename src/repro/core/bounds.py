@@ -10,13 +10,21 @@ from __future__ import annotations
 import numpy as np
 
 
+def _bf_and_mse(inter_size, total_bits: int, num_hashes: int) -> np.ndarray:
+    """Prop IV.1 MSE expression, vectorized over the intersection size —
+    the single home of the formula (scalar bound and streaming RMSE scale
+    both derive from it, so a correction lands in both)."""
+    B, b = float(total_bits), float(num_hashes)
+    c = np.asarray(inter_size, dtype=np.float64)
+    return np.exp(c * b / (B - 1.0)) * B / b**2 - B / b**2 - c / b
+
+
 def bf_and_mse_bound(inter_size: float, total_bits: int, num_hashes: int) -> float:
     """Prop IV.1: MSE upper bound for |X∩Y|_AND (up to the (1+o(1)) factor).
 
     Valid when b = o(sqrt(B)) and b·|X∩Y| <= 0.499·B·log(B).
     """
-    B, b, c = float(total_bits), float(num_hashes), float(inter_size)
-    return float(np.exp(c * b / (B - 1.0)) * B / b**2 - B / b**2 - c / b)
+    return float(_bf_and_mse(inter_size, total_bits, num_hashes))
 
 
 def bf_and_deviation_bound(inter_size: float, total_bits: int, num_hashes: int,
@@ -64,10 +72,8 @@ def bf_and_rmse(inter_size, total_bits: int, num_hashes: int) -> np.ndarray:
     staleness from deferred deletions that stays below it is statistically
     invisible, so rebuilds can wait (the error-budget policy).
     """
-    B, b = float(total_bits), float(num_hashes)
-    c = np.asarray(inter_size, dtype=np.float64)
-    mse = np.exp(c * b / (B - 1.0)) * B / b**2 - B / b**2 - c / b
-    return np.sqrt(np.maximum(mse, 0.0))
+    return np.sqrt(np.maximum(
+        _bf_and_mse(inter_size, total_bits, num_hashes), 0.0))
 
 
 def minhash_error_scale(set_size, k: int, delta: float = 0.05) -> np.ndarray:
@@ -99,8 +105,7 @@ def tc_bf_deviation_bound(m: int, max_degree: int, total_bits: int,
     """Thm VII.1, BF case. Valid when b·Δ ≤ 0.499·B·log(B)."""
     if t <= 0:
         return 1.0
-    B, b, d = float(total_bits), float(num_hashes), float(max_degree)
-    mse = np.exp(d * b / (B - 1.0)) * B / b**2 - B / b**2 - d / b
+    mse = float(_bf_and_mse(max_degree, total_bits, num_hashes))
     return min(1.0, 2.0 * m**2 * mse / (9.0 * t**2))
 
 

@@ -112,6 +112,44 @@ def from_edge_array(n: int, edges: np.ndarray, pad_to_max_degree: Optional[int] 
     )
 
 
+def graph_view(n: int, m: int, deg: jax.Array, adj: jax.Array,
+               edges: jax.Array) -> Graph:
+    """``Graph`` over live device buffers — zero host → device traffic.
+
+    The streaming hot path hands in its persistent device arrays (``deg``
+    int32[n], ``adj`` int32[n, cap] sorted rows padded with n, ``edges``
+    int32[m, 2] in canonical key order) and gets the engine's graph type
+    without any host materialization: the CSR fields are *derived on device*
+    — indptr is a cumsum of deg, and indices come from lexsorting both
+    directions of the edge list by (src, dst), exactly how
+    ``from_edge_array`` builds them, so the cost is O(m log m) (not O(n·cap)
+    like a dense adjacency scan) with the sort shape pow2-bucketed to keep
+    one compiled variant per size class across deltas. The only difference
+    from ``from_edge_array`` is the adjacency width — ``cap`` headroom
+    columns instead of a tight d_max — and the padding sentinel makes the
+    extra columns invisible to every consumer.
+
+    The CSR derivation is eager even though the streaming tc/lcc/similarity
+    hot path reads only adj/deg/edges: ``Graph`` is a frozen pytree whose
+    fields must be arrays (a lazy thunk would break flattening), and a view
+    missing its CSR would fail *silently* in host-side consumers
+    (``neighbors_np``, ``build_bloom_np``). The cost is device-only compute
+    — zero host traffic, the resource this path actually bounds.
+    """
+    indptr = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(deg, dtype=jnp.int32)])
+    cap = int(adj.shape[1]) if n else 1
+    m_b = 1 << (max(2 * m, 1) - 1).bit_length()
+    pad = jnp.full(m_b - 2 * m, n, dtype=jnp.int32)    # sorts after real ids
+    src = jnp.concatenate([edges[:, 0], edges[:, 1], pad])
+    dst = jnp.concatenate([edges[:, 1], edges[:, 0], pad])
+    order = jnp.lexsort((dst, src))[: 2 * m]
+    indices = jnp.take(dst, order).astype(jnp.int32)
+    return Graph(indptr=indptr, indices=indices, adj=adj, deg=deg,
+                 edges=edges, n_vertices=int(n), n_edges=int(m),
+                 d_max=max(cap, 1))
+
+
 # ----------------------------------------------------------------------------
 # Generators (paper: Kronecker power-law synthetics + real-world sets)
 # ----------------------------------------------------------------------------

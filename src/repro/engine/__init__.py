@@ -7,6 +7,7 @@ one sketch build across many queries. See engine.py for the full story.
 from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
                    order_edges_by_hub, plan_for)
 from .engine import (
+    DeviceCarry,
     MiningSession,
     edge_cardinalities,
     pair_cardinality_fn,
@@ -18,8 +19,8 @@ from .engine import (
 )
 
 __all__ = [
-    "EnginePlan", "MiningSession", "edge_cardinalities", "fold_edges",
-    "fold_edges_masked", "map_edges", "order_edges_by_hub",
+    "DeviceCarry", "EnginePlan", "MiningSession", "edge_cardinalities",
+    "fold_edges", "fold_edges_masked", "map_edges", "order_edges_by_hub",
     "pair_cardinality_fn", "plan_for", "resolve_plan", "session",
     "sum_edge_cardinalities", "triple_cardinality_ones", "wedge_triple_ones",
 ]

@@ -177,6 +177,53 @@ def wedge_triple_ones(sketch: SketchSet, u: jax.Array, v: jax.Array,
 # multi-query session
 # ----------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class DeviceCarry:
+    """Device-resident carry for :meth:`MiningSession.refresh`.
+
+    The host-array carry contract uploads O(m) indices per refresh; a
+    device-resident streaming graph instead derives the position carry on
+    device (from its edge-list splice) and uploads only the delta-sized
+    recompute set, so refresh traffic scales with the delta.
+
+    Attributes:
+      carry:         int32[>= m_new] device — new edge j carried old position
+                     ``carry[j]`` (>= 0), or < 0 for an inserted edge. Entries
+                     in the recompute set may be stale; they are overwritten.
+      recompute_pos: int32[R_b] device — positions whose cached cardinality
+                     must be recomputed (covers every carry < 0 and every
+                     edge with an invalidated endpoint), padded with >= m_new
+                     (dropped by the scatter).
+      n_recompute:   the true number R of recomputed positions.
+      edges_full:    int32[E_cap, 2] device — the capacity-padded edge buffer
+                     the recompute edges are gathered from. Its *stable*
+                     shape keeps the gather's compiled program cached across
+                     deltas (graph.edges is [m, 2] and m changes every
+                     delta); rows at padded positions are sentinels whose
+                     cardinalities the scatter drops.
+    """
+
+    carry: jax.Array
+    recompute_pos: jax.Array
+    n_recompute: int
+    edges_full: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("m_new",))
+def _carry_cards(old_cards, carry, *, m_new):
+    c = jnp.clip(carry[:m_new], 0, old_cards.shape[0] - 1)
+    return jnp.take(old_cards, c)
+
+
+@functools.partial(jax.jit, static_argnames=("m_new",))
+def _carry_scatter_cards(old_cards, carry, pos, sub, *, m_new):
+    """One fused program per (m_old, m_new, R_b): slice-gather the carried
+    cardinalities, overwrite the recomputed subset (padded pos >= m_new are
+    dropped)."""
+    c = jnp.clip(carry[:m_new], 0, old_cards.shape[0] - 1)
+    return jnp.take(old_cards, c).at[pos].set(sub, mode="drop")
+
+
 class MiningSession:
     """Amortizes one sketch build + one per-edge cardinality pass across
     TC, LCC, Jarvis-Patrick and 4-clique queries on the same graph."""
@@ -239,9 +286,12 @@ class MiningSession:
         ``graph.edges`` when its cached cardinality is still valid (neither
         endpoint's neighborhood, degree, or sketch row changed), or -1 to
         recompute. With ``carry_index=None`` the whole cache is dropped.
-        Returns the number of per-edge cardinalities recomputed, or ``None``
-        when the cache was dropped instead (the full pass then happens
-        lazily — nothing was carried over).
+        A :class:`DeviceCarry` keeps the whole exchange on device (carried
+        values are gathered by the device permutation, only the delta-sized
+        recompute positions were uploaded). Returns the number of per-edge
+        cardinalities recomputed, or ``None`` when the cache was dropped
+        instead (the full pass then happens lazily — nothing was carried
+        over).
 
         Per-pair estimators are elementwise in the pair, so recomputing only
         the invalidated subset is bit-identical to a from-scratch pass.
@@ -254,6 +304,8 @@ class MiningSession:
                 or int(old_cards.shape[0]) == 0):
             self._edge_cards = None
             return None
+        if isinstance(carry_index, DeviceCarry):
+            return self._refresh_device(old_cards, carry_index)
         carry = np.asarray(carry_index, dtype=np.int64)
         if carry.shape[0] == 0:
             self._edge_cards = jnp.zeros((0,), jnp.float32)
@@ -273,6 +325,32 @@ class MiningSession:
                 sub[:recompute.size])
         self._edge_cards = cards
         return int(recompute.size)
+
+    def _refresh_device(self, old_cards: jax.Array, dc: DeviceCarry) -> int:
+        """Device-side cache carry: gather by the splice permutation, then
+        recompute only the invalidated positions (edges gathered on device,
+        no host round-trip)."""
+        m_new = self.graph.m
+        if m_new == 0:
+            self._edge_cards = jnp.zeros((0,), jnp.float32)
+            return 0
+        if dc.n_recompute:
+            # gather from the stable-shape buffer so the compiled gather is
+            # reused across deltas; padded positions hit sentinel rows whose
+            # (garbage) cardinalities the fused scatter below drops. Clamp
+            # the sentinel vertex id n to a real row first: the Pallas
+            # kernel path DMAs rows by raw index and must never see an
+            # out-of-bounds one (the jnp path would merely clip).
+            sub_edges = jnp.minimum(
+                jnp.take(dc.edges_full, dc.recompute_pos, axis=0),
+                jnp.int32(max(self.graph.n - 1, 0)))
+            sub = edge_cardinalities(self.graph, self.sketch, self.plan,
+                                     edges=sub_edges)
+            self._edge_cards = _carry_scatter_cards(
+                old_cards, dc.carry, dc.recompute_pos, sub, m_new=m_new)
+        else:
+            self._edge_cards = _carry_cards(old_cards, dc.carry, m_new=m_new)
+        return int(dc.n_recompute)
 
     def stats(self) -> dict:
         sk = self.sketch

@@ -6,7 +6,9 @@ a timestamped arrival stream, and replays them in delta batches against a
 query flush (similarity / membership / link prediction / triangle count)
 through :class:`repro.stream.BatchedQueryServer`. Per batch it reports what
 incremental maintenance saved (rows updated in place vs selectively rebuilt
-vs the full-rebuild alternative) and the servers' latency/staleness stats;
+vs the full-rebuild alternative), the host → device bytes the delta uploaded
+(the device-resident path's contract: proportional to the delta, never a
+full-graph snapshot) and the servers' latency/staleness stats;
 ``--verify`` additionally checks every answer against a from-scratch
 ``engine.session`` on the equivalent static graph (exact match under the
 default strict policy).
@@ -152,6 +154,7 @@ def main():
               f"tc={row['tc']:.1f} recomputed={info['cards_recomputed']}"
               f"/carried={info['cards_carried']} "
               f"rebuilt={info['rows_rebuilt_now']} "
+              f"upload={info['bytes_uploaded'] / 1024:.1f}KiB "
               f"delta={dt_delta*1e3:.1f}ms query={dt_query*1e3:.1f}ms"
               + (f" exact={row['verify']['exact_match']}" if args.verify
                  else ""))

@@ -15,13 +15,14 @@ accuracy bounds.
     rid = server.submit_similarity(pairs, "jaccard")
     answer = server.flush()[rid]          # .value, .latency_s, .staleness
 """
-from .dynamic_graph import DeltaResult, DynamicGraph
+from .dynamic_graph import (DeltaResult, DeviceGraphState, DynamicGraph,
+                            TrafficMeter)
 from .maintenance import STRICT_POLICY, ErrorBudgetPolicy, SketchMaintainer
 from .server import BatchedQueryServer, QueryResult
 from .session import StreamSession, stream_session
 
 __all__ = [
-    "DeltaResult", "DynamicGraph",
+    "DeltaResult", "DeviceGraphState", "DynamicGraph", "TrafficMeter",
     "ErrorBudgetPolicy", "SketchMaintainer", "STRICT_POLICY",
     "BatchedQueryServer", "QueryResult",
     "StreamSession", "stream_session",

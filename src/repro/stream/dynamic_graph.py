@@ -3,10 +3,16 @@
 ``DynamicGraph`` owns the same CSR + padded-adjacency representation as the
 frozen :class:`repro.core.graph.Graph`, but host-side (numpy) and mutable:
 adjacency rows carry *headroom* slots so a batched ``apply_delta`` usually
-edits rows in place instead of reallocating, and ``snapshot()`` materializes
-a device ``Graph`` that is bit-identical to ``from_edge_array`` on the same
-edge set — so every batch-mode algorithm, sketch builder, and engine plan
-runs unchanged on the evolving graph.
+edits rows in place instead of reallocating. The host arrays stay the source
+of truth; the serving hot path never re-uploads them. Instead a
+:class:`DeviceGraphState` keeps ``deg``/``adj``/``edges`` resident on device
+and ``apply_delta`` pushes only the touched rows — a jitted (donated off
+CPU) scatter-update plus an edge-list splice sized by the delta — so host →
+device traffic per delta is proportional to the delta, not to O(n·d_max+m).
+``view()`` wraps the live device buffers in a lightweight ``Graph`` for the
+engine; ``snapshot()`` is the *explicit* full host materialization, needed
+only by ``save()`` / ``--verify`` style consumers, and is bit-identical to
+``from_edge_array`` on the same edge set.
 
 The vertex set [0, n) is fixed; edges arrive and depart in batches. Edge
 identity is the canonical key ``lo·n + hi`` (u < v), kept as one sorted
@@ -16,13 +22,16 @@ vectorized set algebra (SISA's framing: updates are set operations too).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.graph import Graph, canonical_edge_keys
+from ..core.graph import Graph, canonical_edge_keys, graph_view
+from ..engine.plan import pow2_bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,10 +73,197 @@ class DeltaResult:
         src, dst = src[order], dst[order]
         verts, start = np.unique(src, return_index=True)
         counts = np.diff(np.append(start, src.size))
+        # offset scatter: within-group column = global rank - group start
+        row = np.repeat(np.arange(verts.size), counts)
+        col = np.arange(src.size) - np.repeat(start, counts)
         padded = np.full((verts.size, int(counts.max())), n, dtype=np.int32)
-        for i, (s, c) in enumerate(zip(start, counts)):
-            padded[i, :c] = dst[s:s + c]
+        padded[row, col] = dst
         return verts.astype(np.int32), padded
+
+
+class TrafficMeter:
+    """Host → device upload accounting for the streaming delta path.
+
+    ``put()`` is the single doorway every streaming upload goes through, so
+    ``bytes_delta`` (reset by ``begin_delta``) is an *exact* measure of host
+    traffic per delta — the quantity the device-resident design bounds by
+    the delta size. Init-time puts copy the host buffer first: ``jnp.asarray``
+    can be zero-copy on CPU and the session-open uploads pass ``dyn.deg`` /
+    ``dyn.adj``, which later deltas mutate in place; delta-path callers all
+    pass freshly built padded buffers, so they skip the copy.
+    """
+
+    def __init__(self):
+        self.bytes_init = 0         # one-time device residency (session open)
+        self.bytes_total = 0        # cumulative delta-path uploads
+        self.bytes_delta = 0        # uploads since the last begin_delta()
+        self.steps = 0              # committed delta/flush traffic steps
+
+    def begin_delta(self):
+        self.bytes_delta = 0
+
+    def commit_step(self):
+        """Count one real delta/flush step (no-op steps stay unmetered so
+        ``bytes_per_delta_mean`` reflects deltas that did work)."""
+        self.steps += 1
+
+    def put(self, arr: np.ndarray, init: bool = False) -> jax.Array:
+        host = np.array(arr, copy=True) if init else np.ascontiguousarray(arr)
+        if init:
+            self.bytes_init += host.nbytes
+        else:
+            self.bytes_delta += host.nbytes
+            self.bytes_total += host.nbytes
+        return jnp.asarray(host)
+
+    def stats(self) -> dict:
+        return {
+            "bytes_init": self.bytes_init,
+            "bytes_total": self.bytes_total,
+            "bytes_last_delta": self.bytes_delta,
+            "bytes_per_delta_mean": self.bytes_total / max(self.steps, 1),
+            "steps": self.steps,
+        }
+
+
+def _scatter_rows_impl(adj, verts, rows):
+    """adj[verts] <- rows over the leading row columns; pad verts == n drop."""
+    cols = jnp.arange(rows.shape[1], dtype=jnp.int32)
+    return adj.at[verts[:, None], cols[None, :]].set(rows, mode="drop")
+
+
+def _scatter_vals_impl(vec, verts, vals):
+    return vec.at[verts].set(vals, mode="drop")
+
+
+def _splice_edges_impl(edges, del_pos, ins_pos, ins_uv, m_old, n):
+    """Delta-sized splice of the canonical-order device edge list.
+
+    ``edges`` is int32[e_cap, 2]: valid edges in (lo, hi)-lex == key order at
+    [0, m_old), sentinel rows (n, n) after. Deleted positions are sentineled,
+    inserts land in the free slots [m_old, m_old+I), and one on-device
+    lexsort restores canonical order (sentinels sort last) — zero host
+    traffic beyond the delta-sized index/edge uploads. Also returns the
+    position carry: ``carry[j]`` is new edge j's position in the *old* order
+    (or -1 for an insert), the device-resident replacement for uploading an
+    O(m) carry index into the session's cardinality-cache refresh.
+    """
+    e_cap = edges.shape[0]
+    pos = jnp.arange(e_cap, dtype=jnp.int32)
+    deleted = jnp.zeros(e_cap, jnp.bool_).at[del_pos].set(True, mode="drop")
+    edges = jnp.where(deleted[:, None], jnp.int32(n), edges)
+    edges = edges.at[ins_pos].set(ins_uv, mode="drop")
+    order = jnp.lexsort((edges[:, 1], edges[:, 0])).astype(jnp.int32)
+    new_edges = jnp.take(edges, order, axis=0)
+    old_flag = (pos < m_old) & ~deleted
+    carry = jnp.where(jnp.take(old_flag, order), order, jnp.int32(-1))
+    return new_edges, carry
+
+
+@functools.lru_cache(maxsize=None)
+def _update_fns():
+    """The jitted device-update kernels, donation decided at first *use*.
+
+    Donating the old buffer gives true in-place device updates; CPU has no
+    donation support and would warn on every compile. The backend query must
+    not run at import time — it would initialize JAX as an import side
+    effect and freeze the decision before the program configures platforms
+    (same call-time pattern as ``repro.kernels.ops``).
+    """
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return tuple(jax.jit(fn, donate_argnums=donate) for fn in
+                 (_scatter_rows_impl, _scatter_vals_impl, _splice_edges_impl))
+
+
+class DeviceGraphState:
+    """Persistent device mirrors of a DynamicGraph's deg/adj/edges.
+
+    Created once per session (one full upload, metered as ``bytes_init``);
+    afterwards every delta is absorbed by delta-sized scatter-updates with
+    pow2-bucketed shapes, so a handful of compiled variants serve any delta
+    and per-delta host traffic scales with the delta, never with n·d_max.
+    Capacity growth (adjacency headroom exhausted, edge buffer full) happens
+    *on device* via sentinel padding — still zero full-graph upload; the
+    grown rows themselves arrive through the ordinary touched-row scatter.
+    """
+
+    def __init__(self, dyn: "DynamicGraph", meter: TrafficMeter):
+        self.n = dyn.n
+        self.meter = meter
+        self.deg = meter.put(dyn.deg, init=True)
+        self.adj = meter.put(dyn.adj, init=True)
+        self.e_cap = pow2_bucket(max(dyn.m, 1))
+        edges = np.full((self.e_cap, 2), dyn.n, dtype=np.int32)
+        edges[:dyn.m] = dyn.edge_array()
+        self.edges = meter.put(edges, init=True)
+        self.m = dyn.m
+        self.last_carry: Optional[jax.Array] = None
+        self._identity: Optional[jax.Array] = None
+
+    def identity_carry(self) -> jax.Array:
+        """Position carry of a no-splice step (flush-triggered rebuilds)."""
+        if self._identity is None or self._identity.shape[0] != self.e_cap:
+            self._identity = jnp.arange(self.e_cap, dtype=jnp.int32)
+        return self._identity
+
+    def apply_delta(self, dyn: "DynamicGraph", delta: "DeltaResult",
+                    del_pos: np.ndarray, old_deg_touched: np.ndarray,
+                    m_old: int) -> None:
+        """Mirror one already-applied host delta with delta-sized uploads."""
+        _scatter_rows, _scatter_vals, _splice_edges = _update_fns()
+        n = self.n
+        cap = dyn.capacity
+        if self.adj.shape[1] < cap:          # headroom growth, device-side
+            self.adj = jnp.pad(self.adj,
+                               ((0, 0), (0, cap - self.adj.shape[1])),
+                               constant_values=n)
+        touched = delta.touched
+        if touched.size:
+            # per-row width covers the row before AND after the delta so
+            # untouched columns are sentinel on both sides of the scatter;
+            # rows are partitioned by pow2 width bucket so one hub does not
+            # inflate every row's upload to its width (≤ log(cap) scatters,
+            # each a reused compiled variant)
+            wv = np.maximum(np.maximum(old_deg_touched, dyn.deg[touched]), 1)
+            wb = np.minimum(2 ** np.ceil(np.log2(wv)).astype(np.int64)
+                            .clip(min=0), cap)
+            for width in np.unique(wb):
+                grp = touched[wb == width]
+                w_b = int(width)
+                t_b = pow2_bucket(grp.size)
+                verts = np.full(t_b, n, dtype=np.int32)
+                verts[:grp.size] = grp
+                rows = np.full((t_b, w_b), n, dtype=np.int32)
+                rows[:grp.size] = dyn.adj[grp, :w_b]
+                self.adj = _scatter_rows(self.adj, self.meter.put(verts),
+                                         self.meter.put(rows))
+            # degrees are width-independent: one scatter over all touched
+            t_b = pow2_bucket(touched.size)
+            verts = np.full(t_b, n, dtype=np.int32)
+            verts[:touched.size] = touched
+            degs = np.zeros(t_b, dtype=np.int32)
+            degs[:touched.size] = dyn.deg[touched]
+            self.deg = _scatter_vals(self.deg, self.meter.put(verts),
+                                     self.meter.put(degs))
+
+        n_ins = int(delta.inserted.shape[0])
+        if self.e_cap < m_old + n_ins:       # edge buffer growth, device-side
+            new_cap = pow2_bucket(m_old + n_ins)
+            self.edges = jnp.pad(self.edges,
+                                 ((0, new_cap - self.e_cap), (0, 0)),
+                                 constant_values=n)
+            self.e_cap = new_cap
+        i_b, d_b = pow2_bucket(n_ins), pow2_bucket(del_pos.size)
+        dpos = np.full(d_b, self.e_cap, dtype=np.int32)   # sentinel -> drop
+        dpos[:del_pos.size] = del_pos
+        ipos = np.full(i_b, self.e_cap, dtype=np.int32)
+        ipos[:n_ins] = m_old + np.arange(n_ins)
+        iuv = np.full((i_b, 2), n, dtype=np.int32)
+        iuv[:n_ins] = delta.inserted
+        self.edges, self.last_carry = _splice_edges(
+            self.edges, self.meter.put(dpos), self.meter.put(ipos),
+            self.meter.put(iuv), m_old, n)
+        self.m = dyn.m
 
 
 class DynamicGraph:
@@ -81,6 +277,8 @@ class DynamicGraph:
         self.adj = adj                    # int32[n, cap]; rows sorted, pad = n
         self.headroom = float(headroom)
         self.version = int(version)
+        self.traffic = TrafficMeter()
+        self._device: Optional[DeviceGraphState] = None
 
     # ------------------------------------------------------------------
     # construction
@@ -117,9 +315,34 @@ class DynamicGraph:
         """int64[m, 2] canonical (u < v) edges in key order."""
         return _decode_keys(self.n, self.edge_keys)
 
+    @property
+    def device(self) -> DeviceGraphState:
+        """The device-resident mirror, created (one full upload) on first use
+        and kept current by every subsequent ``apply_delta``."""
+        if self._device is None:
+            self._device = DeviceGraphState(self, self.traffic)
+        return self._device
+
+    def view(self) -> Graph:
+        """Lightweight ``Graph`` over the live device buffers — the streaming
+        hot path's graph, built with zero host → device traffic.
+
+        Value-identical to ``snapshot()`` everywhere an algorithm reads it
+        (same deg/edges/CSR contents; the padded adjacency only carries extra
+        sentinel columns, which every consumer ignores); the next
+        ``apply_delta`` supersedes it, so sessions must repoint at a fresh
+        view per delta (``StreamSession`` does).
+        """
+        dev = self.device
+        return graph_view(self.n, self.m, dev.deg, dev.adj,
+                          dev.edges[:self.m])
+
     def snapshot(self) -> Graph:
-        """Device ``Graph`` of the current state — bit-identical (arrays and
-        static fields) to ``from_edge_array(n, self.edge_array())``.
+        """Explicit full host materialization: a device ``Graph`` that is
+        bit-identical (arrays and static fields) to
+        ``from_edge_array(n, self.edge_array())``. The streaming hot path
+        never calls this — only ``save()``/``--verify``-style consumers do;
+        serving reads ``view()`` instead.
 
         Every numpy buffer handed to jax is a fresh copy: ``jnp.asarray`` of
         a host array can be zero-copy on CPU, and ``self.adj``/``self.deg``
@@ -172,9 +395,14 @@ class DynamicGraph:
             return DeltaResult(ins_uv, del_uv, np.zeros(0, np.int64),
                                np.zeros(0, np.int64), self.version)
 
+        # positions of the deleted edges in the *old* canonical order — the
+        # device edge-splice scatters these before the host order changes
+        del_pos = np.searchsorted(cur, del_applied).astype(np.int64)
+        m_old = int(cur.shape[0])
         self.edge_keys = np.union1d(kept, ins_applied)
         touched = np.unique(np.concatenate([ins_uv.ravel(), del_uv.ravel()]))
         dirty = np.unique(del_uv.ravel())
+        old_deg_touched = self.deg[touched].copy()
 
         new_deg = self.deg.astype(np.int64)
         if ins_uv.size:
@@ -201,7 +429,11 @@ class DynamicGraph:
             self.adj[v, :nbrs.size] = nbrs
             self.adj[v, nbrs.size:] = n
         self.deg = new_deg.astype(np.int32)
-        return DeltaResult(ins_uv, del_uv, touched, dirty, self.version)
+        delta = DeltaResult(ins_uv, del_uv, touched, dirty, self.version)
+        if self._device is not None:
+            self._device.apply_delta(self, delta, del_pos, old_deg_touched,
+                                     m_old)
+        return delta
 
     def carry_index(self, old_keys: np.ndarray,
                     invalid_vertices: np.ndarray) -> Optional[np.ndarray]:

@@ -200,10 +200,15 @@ class SketchMaintainer:
         self.rows_incremental = 0
         self.deltas_applied = 0
         if data is None:
-            # copy: jnp.asarray of a host buffer can be zero-copy on CPU, and
-            # dyn.adj is mutated in place by subsequent deltas while this
-            # build may still be executing asynchronously
-            data = self._build_rows(jnp.asarray(dyn.adj.copy()))
+            # build from the device mirror when it exists (StreamSession
+            # creates it first — no second adjacency upload); otherwise the
+            # meter copies before upload: jnp.asarray of a host buffer can
+            # be zero-copy on CPU, and dyn.adj is mutated in place by
+            # subsequent deltas while this build may still be executing
+            # asynchronously
+            adj_dev = (dyn._device.adj if dyn._device is not None
+                       else dyn.traffic.put(dyn.adj, init=True))
+            data = self._build_rows(adj_dev)
         self.sketch = SketchSet(
             data=data, kind=kind,
             num_hashes=self.num_hashes if kind == "bf" else 0,
@@ -265,7 +270,8 @@ class SketchMaintainer:
         rows[:t] = verts
         padded = np.full((t_p, l_p), self.dyn.n, dtype=np.int32)
         padded[:t, :width] = new_nbrs
-        rows_j, new_j = jnp.asarray(rows), jnp.asarray(padded)
+        rows_j = self.dyn.traffic.put(rows)
+        new_j = self.dyn.traffic.put(padded)
         if self.kind == "bf":
             data = _bloom_insert(self.sketch.data, rows_j, new_j,
                                  n=self.dyn.n, num_hashes=self.num_hashes,
@@ -293,13 +299,25 @@ class SketchMaintainer:
         # padded entries carry row index n and are dropped by the scatter
         n, t = self.dyn.n, int(verts.size)
         bucket = pow2_bucket(t)
-        adj_rows = np.full((bucket, self.dyn.capacity), n, dtype=np.int32)
-        adj_rows[:t] = self.dyn.adj[verts]
         rows_idx = np.full(bucket, n, dtype=np.int32)
         rows_idx[:t] = verts
-        rows = self._build_rows(jnp.asarray(adj_rows))
-        data = self.sketch.data.at[jnp.asarray(rows_idx)].set(rows,
-                                                              mode="drop")
+        dev = self.dyn._device
+        if dev is not None:
+            # device-resident graph: gather the rebuild inputs from the live
+            # device adjacency — only the row *indices* cross the host
+            # boundary (pad index n clips to a real row, whose result the
+            # scatter then drops)
+            idx_j = self.dyn.traffic.put(rows_idx)
+            adj_rows = jnp.take(dev.adj, jnp.clip(idx_j, 0, max(n - 1, 0)),
+                                axis=0)
+        else:
+            idx_j = jnp.asarray(rows_idx)
+            adj_rows_np = np.full((bucket, self.dyn.capacity), n,
+                                  dtype=np.int32)
+            adj_rows_np[:t] = self.dyn.adj[verts]
+            adj_rows = jnp.asarray(adj_rows_np)
+        rows = self._build_rows(adj_rows)
+        data = self.sketch.data.at[idx_j].set(rows, mode="drop")
         self.sketch = dataclasses.replace(self.sketch, data=data)
         self.dirty[verts] = False
         self.stale[verts] = 0

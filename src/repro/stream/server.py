@@ -138,18 +138,22 @@ class BatchedQueryServer:
             self._real_rows += total
             self._padded_rows += padded.shape[0]
             fn = eng.pair_cardinality_fn(sess.graph, sess.sketch, sess.plan)
-            cards = np.asarray(eng.map_edges(jnp.asarray(padded), fn,
-                                             sess.plan))[:total]
-            deg = np.asarray(sess.graph.deg)
+            pairs_j = jnp.asarray(padded)
+            cards_j = eng.map_edges(pairs_j, fn, sess.plan)
+            # degrees gathered on device at the queried pairs only — a full
+            # np.asarray(graph.deg) here would move O(n) bytes per flush,
+            # against the streaming path's delta-sized-transfer contract
+            du_j = jnp.take(sess.graph.deg, pairs_j[:, 0]).astype(jnp.float32)
+            dv_j = jnp.take(sess.graph.deg, pairs_j[:, 1]).astype(jnp.float32)
+            cards = np.asarray(cards_j)
+            du_all, dv_all = np.asarray(du_j), np.asarray(dv_j)
             off = 0
             for p in pair_reqs:
                 k = p.pairs.shape[0]
-                sub = cards[off:off + k]
-                du = deg[p.pairs[:, 0]].astype(np.float32)
-                dv = deg[p.pairs[:, 1]].astype(np.float32)
                 scores[p.request_id] = np.asarray(similarity_from_cardinalities(
-                    jnp.asarray(sub), jnp.asarray(du), jnp.asarray(dv),
-                    p.measure))
+                    jnp.asarray(cards[off:off + k]),
+                    jnp.asarray(du_all[off:off + k]),
+                    jnp.asarray(dv_all[off:off + k]), p.measure))
                 off += k
 
         out: Dict[int, QueryResult] = {}

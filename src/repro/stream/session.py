@@ -9,6 +9,14 @@ are recomputed; everything else is carried over by index. Under the strict
 (default) error-budget policy every answer is bit-identical to a
 from-scratch ``engine.session`` on the equivalent static graph.
 
+The delta path is *device-resident*: the session serves queries from
+``DynamicGraph.view()`` (a Graph over persistent device buffers) and every
+per-delta upload — touched adjacency rows, edge-list splice, sketch-row
+merges, recompute positions — is sized by the delta, never by the graph
+(``stats()["traffic"]`` reports the exact bytes). A full host
+materialization (``snapshot()``) happens only on ``save()`` or explicit
+verification.
+
 Snapshot/restore goes through ``repro.checkpoint.store`` (atomic publish,
 bounded retention), so a serving process can resume mid-stream.
 """
@@ -23,8 +31,8 @@ import numpy as np
 
 from ..checkpoint import store
 from ..core.sketches import SketchSet, bloom_membership
-from ..engine.engine import MiningSession, resolve_plan
-from ..engine.plan import EnginePlan
+from ..engine.engine import DeviceCarry, MiningSession, resolve_plan
+from ..engine.plan import EnginePlan, pow2_bucket
 from .dynamic_graph import DynamicGraph
 from .maintenance import ErrorBudgetPolicy, SketchMaintainer
 
@@ -40,10 +48,12 @@ class StreamSession:
                  plan: Optional[EnginePlan] = None,
                  sketch_data=None, **plan_kw):
         self.dyn = dyn
+        graph = dyn.view()                 # device-resident; no host snapshot
+        # the mirror exists now, so the initial sketch build reads the
+        # device adjacency directly instead of uploading it a second time
         self.maintainer = None if kind is None else SketchMaintainer(
             dyn, kind, storage_budget=storage_budget, num_hashes=num_hashes,
             seed=seed, words=words, k=k, policy=policy, data=sketch_data)
-        graph = dyn.snapshot()
         sketch = self.maintainer.sketch if self.maintainer else None
         self.session = MiningSession(
             graph, sketch, resolve_plan(plan, graph, sketch, plan_kw))
@@ -64,27 +74,56 @@ class StreamSession:
     def sketch(self) -> Optional[SketchSet]:
         return self.maintainer.sketch if self.maintainer else None
 
+    def _device_carry(self, carry_host: Optional[np.ndarray],
+                      identity: bool) -> Optional[DeviceCarry]:
+        """Assemble the device-resident refresh carry: the splice permutation
+        already lives on device; only the delta-sized recompute positions
+        (where the host-computed carry is invalid) are uploaded."""
+        if carry_host is None:
+            return None
+        dev = self.dyn.device
+        base = dev.identity_carry() if identity else dev.last_carry
+        if base is None:
+            return None
+        recompute = np.nonzero(carry_host < 0)[0]
+        r = int(recompute.size)
+        pos = np.full(pow2_bucket(r), self.dyn.m, dtype=np.int32)
+        pos[:r] = recompute
+        return DeviceCarry(base, self.dyn.traffic.put(pos), r, dev.edges)
+
     def apply_delta(self, inserts=None, deletes=None) -> dict:
         """Apply one edge-delta batch: mutate the graph, maintain the sketch
-        incrementally, and refresh only the invalidated session caches."""
+        incrementally, and refresh only the invalidated session caches.
+
+        Device-resident: no full-graph host copy or upload happens here —
+        the returned ``bytes_uploaded`` (also in ``stats()["traffic"]``) is
+        the exact host → device traffic, proportional to the delta size.
+        """
         old_keys = self.dyn.edge_keys
+        self.dyn.traffic.begin_delta()
         delta = self.dyn.apply_delta(inserts, deletes)
         rebuilt = (self.maintainer.apply(delta)
                    if self.maintainer else np.zeros(0, np.int64))
-        graph = self.dyn.snapshot()
-        # a row rebuilt this delta may have gone dirty at an *earlier* delta
-        # (policy deferral), so invalidation covers touched ∪ rebuilt
-        invalid = np.union1d(delta.touched, rebuilt)
-        carry = self.dyn.carry_index(old_keys, invalid)
-        recomputed = self.session.refresh(
-            graph, self.maintainer.sketch if self.maintainer else None, carry)
         self.version += 1
-        # refresh returns None when it dropped the cache (nothing carried;
-        # the full pass happens lazily) — don't count that as savings
-        rec = 0 if recomputed is None else recomputed
-        car = 0 if recomputed is None else max(graph.m - recomputed, 0)
-        self.cards_recomputed += rec
-        self.cards_carried += car
+        rec = car = 0
+        if not (delta.is_noop and rebuilt.size == 0):
+            self.dyn.traffic.commit_step()   # noop deltas stay unmetered
+            graph = self.dyn.view()
+            # a row rebuilt this delta may have gone dirty at an *earlier*
+            # delta (policy deferral), so invalidation covers touched∪rebuilt
+            invalid = np.union1d(delta.touched, rebuilt)
+            carry = self._device_carry(
+                self.dyn.carry_index(old_keys, invalid),
+                identity=delta.is_noop)    # noop delta ran no edge splice
+            recomputed = self.session.refresh(
+                graph, self.maintainer.sketch if self.maintainer else None,
+                carry)
+            # refresh returns None when it dropped the cache (nothing
+            # carried; the full pass happens lazily) — not counted as savings
+            rec = 0 if recomputed is None else recomputed
+            car = 0 if recomputed is None else max(graph.m - recomputed, 0)
+            self.cards_recomputed += rec
+            self.cards_carried += car
         return {
             "version": self.version,
             "inserted": int(delta.inserted.shape[0]),
@@ -93,18 +132,23 @@ class StreamSession:
             "rows_rebuilt_now": int(rebuilt.size),
             "cards_recomputed": rec,
             "cards_carried": car,
+            "bytes_uploaded": self.dyn.traffic.bytes_delta,
         }
 
     def flush(self) -> int:
         """Force-rebuild all dirty sketch rows and refresh their edges —
         makes subsequent answers exact w.r.t. the current graph even under a
         lazy error-budget policy."""
-        if self.maintainer is None:
-            return 0
+        if self.maintainer is None or not self.maintainer.dirty.any():
+            return 0       # nothing to rebuild: not a metered traffic step
+        self.dyn.traffic.begin_delta()
+        self.dyn.traffic.commit_step()
         rebuilt = self.maintainer.flush()
         if rebuilt.size:
-            carry = self.dyn.carry_index(self.dyn.edge_keys, rebuilt)
-            self.session.refresh(self.dyn.snapshot(), self.maintainer.sketch,
+            carry = self._device_carry(
+                self.dyn.carry_index(self.dyn.edge_keys, rebuilt),
+                identity=True)             # edge set unchanged by a flush
+            self.session.refresh(self.dyn.view(), self.maintainer.sketch,
                                  carry)
         return int(rebuilt.size)
 
@@ -138,6 +182,10 @@ class StreamSession:
             "n": self.dyn.n, "m": self.dyn.m,
             "cards_recomputed": self.cards_recomputed,
             "cards_carried": self.cards_carried,
+            # host → device bytes: init is the one-time residency upload;
+            # bytes_per_delta_mean is the per-delta traffic the
+            # device-resident design bounds by the delta size
+            "traffic": self.dyn.traffic.stats(),
         }
         if self.maintainer is not None:
             out["maintenance"] = self.maintainer.stats()

@@ -2,14 +2,16 @@
 
 CI installs the real hypothesis (requirements-dev.txt) and gets full
 property-based testing with shrinking. On minimal environments this shim
-keeps `tests/test_estimators.py` collecting and running: `@given` replays
-each property over a fixed number of seeded pseudo-random samples, which
-preserves the assertions' coverage of the estimator/bound contracts without
-adding a dependency.
+keeps the property suites (`test_estimators.py`, `test_stream.py`,
+`test_stream_equivalence.py`) collecting and running: `@given` replays each
+property over a fixed number of seeded pseudo-random samples, which
+preserves the assertions' coverage without adding a dependency.
 
-Only the tiny subset of the hypothesis API that test_estimators.py uses is
-implemented: `given`, `settings(max_examples=, deadline=)`,
-`strategies.integers`, and `strategies.lists(..., unique=True)`.
+Only the tiny subset of the hypothesis API those suites use is implemented:
+`given`, `settings(max_examples=, deadline=)`, `strategies.integers`, and
+`strategies.lists(..., unique=True)`. The stream suites raise their own
+example counts under `HYPOTHESIS_PROFILE=nightly` by reading the env var
+directly, which works identically with the shim and the real library.
 """
 from __future__ import annotations
 
@@ -49,6 +51,10 @@ class strategies:
 
 
 def settings(max_examples: int = 10, deadline=None, **_ignored):
+    # no profile scaling here: suites that raise their counts under
+    # HYPOTHESIS_PROFILE=nightly read the env var themselves (explicit
+    # @settings pins override profiles under real hypothesis too, so this
+    # keeps shim and real-library behavior identical)
     def deco(fn):
         fn._max_examples = max_examples
         return fn

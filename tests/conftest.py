@@ -8,6 +8,26 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+# Hypothesis profiles: CI's nightly job exports HYPOTHESIS_PROFILE=nightly.
+# Tests that pin explicit @settings raise their counts by reading the env
+# var themselves (pins override profiles); this registration covers any
+# future unpinned @given property and keeps newer hypothesis versions (which
+# auto-load the profile named by the env var) from failing on an
+# unregistered name.
+try:
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("nightly", max_examples=100, deadline=None)
+    try:
+        if os.environ.get("HYPOTHESIS_PROFILE"):
+            _hsettings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+    except Exception:
+        # an unregistered profile name from the developer's shell must not
+        # fail collection of the whole suite — keep the default profile
+        pass
+except ImportError:
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,135 @@
+"""The paper's accuracy claims as executable regressions.
+
+Two layers, both on seeded Erdős–Rényi + Kronecker graphs so every number
+is deterministic:
+
+* **Concentration intervals** (Theorem VII.1 via ``core.bounds``): the
+  BF/KMV/kH triangle-count estimate must land inside the smallest deviation
+  ``t`` whose tail probability is ≤ the configured confidence. The interval
+  is inverted analytically here and cross-checked against the bounds module
+  itself, so a regression in either the estimators *or* the bounds breaks
+  the suite.
+* **The >90%-accuracy headline claim** (paper §IX): with modestly sized
+  sketches on power-law (Kronecker) graphs, all three TC estimators must
+  stay within 10% relative error.
+
+The large configurations are ``slow`` (nightly); one small configuration of
+each layer stays in the fast gate as a smoke.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro import engine as eng
+from repro.core import bounds, graph as G, sketches as S
+
+CONF = 0.1      # 90%-confidence intervals
+SKETCH_SEED = 0
+
+
+@functools.lru_cache(maxsize=None)
+def graph_and_exact(name):
+    gs = {
+        "er200": lambda: G.erdos_renyi(200, 0.06, seed=11),
+        "kron7": lambda: G.kronecker(7, 6, seed=3),
+        "er800": lambda: G.erdos_renyi(800, 0.02, seed=7),
+        "kron9": lambda: G.kronecker(9, 8, seed=5),
+    }[name]()
+    return gs, float(eng.session(gs, None).triangle_count())
+
+
+def tc_interval(gs, sk, conf=CONF):
+    """Smallest deviation t with Thm VII.1 tail probability ≤ conf."""
+    deg = np.asarray(gs.deg)
+    if sk.kind == "bf":
+        # invert tc_bf_deviation_bound: 2 m² mse / (9 t²) ≤ conf, with the
+        # MSE taken from the bounds module itself (single formula home)
+        mse = bounds.bf_and_mse_bound(float(deg.max()), sk.total_bits,
+                                      sk.num_hashes)
+        return float(np.sqrt(2.0 * gs.m**2 * max(mse, 0.0) / (9.0 * conf)))
+    # invert tc_minhash_deviation_bound: 2 exp(−18kt²/s2²) ≤ conf
+    s2 = float(np.sum(deg.astype(np.float64) ** 2))
+    return float(s2 * np.sqrt(np.log(2.0 / conf) / (18.0 * sk.k)))
+
+
+def assert_within_interval(name, kind, storage_budget=0.5):
+    gs, exact = graph_and_exact(name)
+    sk = S.build(gs, kind, storage_budget=storage_budget, num_hashes=2,
+                 seed=SKETCH_SEED)
+    est = float(eng.session(gs, sk).triangle_count())
+    t = tc_interval(gs, sk)
+    # the inverted interval must agree with the bounds module itself
+    if kind == "bf":
+        p = bounds.tc_bf_deviation_bound(gs.m, int(np.asarray(gs.deg).max()),
+                                         sk.total_bits, sk.num_hashes, t)
+    else:
+        p = bounds.tc_minhash_deviation_bound(np.asarray(gs.deg), sk.k, t)
+    assert p <= CONF + 1e-9, (name, kind, p)
+    assert abs(est - exact) <= t, \
+        f"{name}/{kind}: |{est:.1f} - {exact:.1f}| > t={t:.1f}"
+
+
+# ---------------------------------------------------------------------------
+# layer 1: estimates land inside the Thm VII.1 concentration intervals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["bf", "kmv", "kh"])
+def test_tc_within_interval_smoke(kind):
+    assert_within_interval("kron7", kind)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["er200", "er800", "kron9"])
+@pytest.mark.parametrize("kind", ["bf", "kmv", "kh"])
+def test_tc_within_interval(name, kind):
+    assert_within_interval(name, kind)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["bf", "kmv", "kh"])
+def test_tc_interval_shrinks_with_budget(kind):
+    """More storage ⇒ a strictly tighter concentration interval."""
+    gs, _ = graph_and_exact("kron7")
+    small = S.build(gs, kind, storage_budget=0.25, num_hashes=2,
+                    seed=SKETCH_SEED)
+    large = S.build(gs, kind, storage_budget=1.0, num_hashes=2,
+                    seed=SKETCH_SEED)
+    assert tc_interval(gs, large) < tc_interval(gs, small)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: the >90%-accuracy headline claim, executable
+# ---------------------------------------------------------------------------
+
+NINETY = [  # (graph, kind, explicit sketch size) — all must stay ≤ 10% off
+    ("kron7", "bf", dict(words=128)),
+    ("kron7", "kmv", dict(k=128)),
+    ("kron7", "kh", dict(k=128)),
+]
+NINETY_SLOW = [
+    ("kron9", "bf", dict(words=256)),
+    ("kron9", "kmv", dict(k=256)),
+    ("kron9", "kh", dict(k=256)),
+    ("er200", "bf", dict(words=256)),
+    ("er200", "kh", dict(k=128)),
+]
+
+
+def assert_ninety(name, kind, kw):
+    gs, exact = graph_and_exact(name)
+    sk = S.build(gs, kind, num_hashes=2, seed=SKETCH_SEED, **kw)
+    est = float(eng.session(gs, sk).triangle_count())
+    rel = abs(est - exact) / max(exact, 1.0)
+    assert rel <= 0.10, f"{name}/{kind}{kw}: relative error {rel:.3f} > 10%"
+
+
+@pytest.mark.parametrize("name,kind,kw", NINETY)
+def test_tc_ninety_percent_accuracy_smoke(name, kind, kw):
+    assert_ninety(name, kind, kw)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,kind,kw", NINETY_SLOW)
+def test_tc_ninety_percent_accuracy(name, kind, kw):
+    assert_ninety(name, kind, kw)

@@ -1,0 +1,236 @@
+"""Stream ⇄ static equivalence & device-residency fuzz harness.
+
+The incremental path is the riskiest code in the repo, so this suite pins
+its whole contract: after *every* interleaved mutation step — random
+insert/delete batches, headroom-overflow row growth, policy-deferred
+rebuilds, ``flush()`` — a ``StreamSession``'s ``triangle_count`` /
+``local_clustering`` / ``similarity`` answers must be **bit-identical** to a
+fresh ``engine.session`` over ``from_edge_array`` on the same edge set, for
+all four sketch kinds (and the exact baseline), while the device-resident
+mirror stays equal to the host source of truth and per-delta host → device
+traffic stays proportional to the delta, never to n·d_max.
+
+``HYPOTHESIS_PROFILE=nightly`` raises the fuzz example counts (CI's nightly
+job sets it); the default profile keeps this suite inside the fast gate.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # minimal environments
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import engine as eng
+from repro.core import graph as G, sketches as S
+from repro.stream import ErrorBudgetPolicy, StreamSession, stream_session
+
+KINDS = ("bf", "kh", "1h", "kmv")
+KW = dict(words=4, k=6, num_hashes=2, seed=3)
+NIGHTLY = os.environ.get("HYPOTHESIS_PROFILE") == "nightly"
+N_EXAMPLES = 25 if NIGHTLY else 3
+
+
+def static_session(s, kind):
+    gs = G.from_edge_array(s.dyn.n, s.dyn.edge_array())
+    sk = S.build(gs, kind, **KW) if kind else None
+    return eng.session(gs, sk, plan=s.session.plan)
+
+
+def assert_equiv(s, kind, pairs, ctx=""):
+    """Stream answers ≡ from-scratch static session, bit for bit."""
+    static = static_session(s, kind)
+    assert float(s.triangle_count()) == float(static.triangle_count()), \
+        (kind, ctx)
+    np.testing.assert_array_equal(
+        np.asarray(s.local_clustering()),
+        np.asarray(static.local_clustering()), f"{kind} lcc {ctx}")
+    np.testing.assert_array_equal(
+        np.asarray(s.similarity(pairs, "jaccard")),
+        np.asarray(static.similarity(jnp.asarray(pairs), "jaccard")),
+        f"{kind} similarity {ctx}")
+
+
+def assert_device_mirror(dyn):
+    """The device-resident buffers equal the host source of truth."""
+    dev = dyn._device
+    assert dev is not None, "hot path did not materialize the device state"
+    np.testing.assert_array_equal(np.asarray(dev.deg), dyn.deg, "deg")
+    np.testing.assert_array_equal(np.asarray(dev.adj), dyn.adj, "adj")
+    np.testing.assert_array_equal(np.asarray(dev.edges[: dyn.m]),
+                                  dyn.edge_array(), "edges")
+    tail = np.asarray(dev.edges[dyn.m:])
+    assert (tail == dyn.n).all(), "edge buffer tail lost its sentinel"
+
+
+def random_step(rng, s):
+    """One mutation drawn from {insert, delete, mixed, hub-blast} batches."""
+    n = s.dyn.n
+    op = int(rng.integers(0, 4))
+    ins = dels = None
+    if op in (0, 2):
+        ins = rng.integers(0, n, size=(int(rng.integers(1, 16)), 2))
+    if op in (1, 2):
+        cur = s.dyn.edge_array()
+        if cur.shape[0]:
+            k = min(int(rng.integers(1, 8)), cur.shape[0])
+            dels = cur[rng.choice(cur.shape[0], size=k, replace=False)]
+    if op == 3:
+        # hub blast: push one vertex past its adjacency headroom so the
+        # device mirror must grow its row width without a full re-upload
+        hub = int(rng.integers(0, n))
+        t = rng.choice(n, size=min(n - 1, s.dyn.capacity + 4), replace=False)
+        ins = np.stack([np.full(t.size, hub), t], axis=1)
+    return s.apply_delta(ins, dels)
+
+
+# ---------------------------------------------------------------------------
+# the fuzz: interleaved deltas stay bit-identical, every kind
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fuzz_interleaved_deltas_bit_identical(seed):
+    """Property: after every insert/delete/hub-blast step and after flush(),
+    stream answers ≡ static session for all four sketch kinds.
+
+    (Kinds loop inside the body: the deterministic hypothesis fallback shim
+    wraps properties as zero-arg callables, which parametrize can't feed.)
+    """
+    for kind in KINDS:
+        rng = np.random.default_rng(seed)
+        g = G.erdos_renyi(60, 0.08, seed=seed % 97)
+        s = stream_session(g, kind, policy=ErrorBudgetPolicy(0.0), **KW)
+        _ = s.session.edge_cardinalities()             # warm the shared pass
+        pairs = rng.integers(0, g.n, (16, 2)).astype(np.int32)
+        for i in range(4):
+            info = random_step(rng, s)
+            assert info["bytes_uploaded"] >= 0
+            assert_equiv(s, kind, pairs, f"step {i}")
+            assert_device_mirror(s.dyn)
+        s.flush()
+        assert_equiv(s, kind, pairs, "after flush")
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fuzz_exact_baseline_tracks_device_adjacency(seed):
+    """The sketch-free session reads the device adjacency directly, so any
+    mirror divergence shows up as a wrong exact triangle count."""
+    rng = np.random.default_rng(seed)
+    g = G.erdos_renyi(50, 0.1, seed=seed % 89)
+    s = stream_session(g, None)
+    _ = s.session.edge_cardinalities()
+    pairs = rng.integers(0, g.n, (8, 2)).astype(np.int32)
+    for i in range(4):
+        random_step(rng, s)
+        assert_equiv(s, None, pairs, f"step {i}")
+        assert_device_mirror(s.dyn)
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fuzz_deferred_rebuilds_catch_up_on_flush(seed):
+    """Under a lazy error-budget policy deletions defer row rebuilds; the
+    graph/cache must stay device-mirrored throughout, and flush() must
+    restore bit-identity for every kind."""
+    for kind in KINDS:
+        rng = np.random.default_rng(seed)
+        g = G.erdos_renyi(60, 0.12, seed=seed % 83)
+        s = stream_session(g, kind,
+                           policy=ErrorBudgetPolicy(rel_tolerance=50.0),
+                           **KW)
+        _ = s.session.edge_cardinalities()
+        pairs = rng.integers(0, g.n, (12, 2)).astype(np.int32)
+        for _ in range(3):
+            random_step(rng, s)
+            assert_device_mirror(s.dyn)
+        s.flush()
+        # a flush leaves zero dirty rows and bit-identical answers
+        assert s.maintainer.stats()["rows_dirty"] == 0
+        assert_equiv(s, kind, pairs, "after lazy flush")
+
+
+def test_headroom_overflow_grows_device_adjacency_in_place():
+    """Repeated hub blasts force several capacity reallocations; the device
+    mirror must follow via sentinel padding + touched-row scatters only."""
+    g = G.erdos_renyi(80, 0.05, seed=2)
+    s = stream_session(g, "bf", **KW)
+    _ = s.session.edge_cardinalities()
+    cap0 = s.dyn.capacity
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, g.n, (8, 2)).astype(np.int32)
+    hub = 7
+    for wave in range(3):
+        lo, hi = 1 + wave * 25, 1 + (wave + 1) * 25
+        ins = [[hub, (hub + x) % g.n] for x in range(lo, hi)]
+        info = s.apply_delta(ins)
+        assert info["bytes_uploaded"] > 0
+        assert_device_mirror(s.dyn)
+        assert_equiv(s, "bf", pairs, f"wave {wave}")
+    assert s.dyn.capacity > cap0
+
+
+# ---------------------------------------------------------------------------
+# device-resident contract: per-delta traffic scales with the delta
+# ---------------------------------------------------------------------------
+
+def test_noop_delta_uploads_zero_bytes():
+    s = stream_session(G.erdos_renyi(60, 0.08, seed=1), "bf", **KW)
+    _ = s.session.edge_cardinalities()
+    info = s.apply_delta(np.zeros((0, 2)), None)
+    assert info["bytes_uploaded"] == 0
+    assert s.stats()["traffic"]["bytes_last_delta"] == 0
+
+
+def test_bytes_per_delta_scale_with_delta_not_graph():
+    """The acceptance criterion: the same small delta uploads roughly the
+    same number of bytes no matter how large the resident graph is, and far
+    fewer bytes than the graph's own residency footprint (n·d_max + m)."""
+    per_graph = {}
+    for n in (500, 2000):
+        g = G.erdos_renyi(n, 8.0 / n, seed=4)          # same expected degree
+        s = stream_session(g, "bf", **KW)
+        _ = s.session.edge_cardinalities()
+        rng = np.random.default_rng(7)
+        total = 0
+        for _ in range(3):
+            ins = rng.integers(0, n, size=(8, 2))
+            cur = s.dyn.edge_array()
+            dels = cur[rng.choice(cur.shape[0], size=4, replace=False)]
+            info = s.apply_delta(ins, dels)
+            assert info["bytes_uploaded"] > 0
+            # never within an order of magnitude of re-uploading the graph
+            assert info["bytes_uploaded"] < s.dyn.traffic.bytes_init / 8
+            total += info["bytes_uploaded"]
+        per_graph[n] = total / 3
+    # 4x the vertices, same delta => same-scale uploads (not 4x)
+    assert per_graph[2000] < 3 * per_graph[500], per_graph
+
+
+def test_stats_report_traffic_fields():
+    s = stream_session(G.erdos_renyi(40, 0.1, seed=0), "kmv", **KW)
+    s.apply_delta([[0, 1], [2, 3]])
+    tr = s.stats()["traffic"]
+    for key in ("bytes_init", "bytes_total", "bytes_last_delta",
+                "bytes_per_delta_mean", "steps"):
+        assert key in tr
+    assert tr["bytes_init"] > 0 and tr["bytes_total"] > 0
+
+
+def test_restored_session_keeps_device_resident_equivalence(tmp_path):
+    """Restore re-establishes device residency from the checkpointed host
+    state and keeps streaming bit-identically."""
+    rng = np.random.default_rng(3)
+    s = stream_session(G.erdos_renyi(50, 0.1, seed=6), "kh", **KW)
+    for _ in range(2):
+        random_step(rng, s)
+    s.save(str(tmp_path))
+    r = StreamSession.restore(str(tmp_path))
+    _ = r.session.edge_cardinalities()
+    pairs = rng.integers(0, r.dyn.n, (8, 2)).astype(np.int32)
+    random_step(rng, r)
+    assert_equiv(r, "kh", pairs, "after restore+delta")
+    assert_device_mirror(r.dyn)
