@@ -1,0 +1,72 @@
+"""Local clustering benchmark: PPR push + sweep cuts, sketch vs exact.
+
+Rows (``name,us_per_call,derived``):
+  * ``localcluster/push``        — batched PPR forward push alone.
+  * ``localcluster/sweep_exact`` — sweep-cut scan, exact rank-compare
+                                   increments (O(S·k·d_max) gathers).
+  * ``localcluster/sweep_bf``    — sweep-cut scan, Bloom prefix-filter
+                                   increments (O(S·k·words) popcounts).
+  * ``localcluster/e2e_*``       — full push+sweep, with seeds/sec and the
+                                   sketch-vs-exact accuracy of the best
+                                   conductance (mean |Δφ| over the batch).
+
+The sketch path's win grows with degree skew: the exact sweep pays d_max per
+step, the filter pays a fixed word count (the ProbGraph trade applied to the
+conductance numerator).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bounds, graph as G, sketches as SK
+from repro.core.algorithms import localcluster as LC
+from repro import engine as ENG
+
+from .common import emit, timeit
+
+SCALE = 10
+SEEDS = 8
+ALPHA = 0.15
+EPS = 1e-4
+
+
+def run() -> None:
+    """Emit the localcluster suite's CSV rows (see module docstring)."""
+    g = G.kronecker(SCALE, 8, seed=1)
+    sk = SK.build(g, "bf", storage_budget=2.0)
+    plan = ENG.plan_for(g, sk)
+    rng = np.random.default_rng(3)
+    seeds = rng.integers(0, g.n, size=SEEDS).astype(np.int32)
+
+    p, _, _ = LC.ppr_push(g, seeds, ALPHA, EPS)
+    us = timeit(lambda: LC.ppr_push(g, seeds, ALPHA, EPS)[0])
+    emit("localcluster/push", us, f"n={g.n},m={g.m},seeds={SEEDS}")
+
+    us_exact = timeit(lambda: LC.sweep_cut(g, p, None, plan)[1])
+    emit("localcluster/sweep_exact", us_exact,
+         f"k={plan.sweep_cap},d_max={g.d_max}")
+    us_bf = timeit(lambda: LC.sweep_cut(g, p, sk, plan)[1])
+    emit("localcluster/sweep_bf", us_bf,
+         f"k={plan.sweep_cap},words={sk.data.shape[1]},"
+         f"speedup={us_exact / max(us_bf, 1e-9):.2f}x")
+
+    res_e = LC.local_cluster(g, seeds, ALPHA, EPS, None, plan)
+    res_b = LC.local_cluster(g, seeds, ALPHA, EPS, sk, plan)
+    us_e2e = timeit(
+        lambda: LC.local_cluster(g, seeds, ALPHA, EPS, sk, plan).conductance)
+    phi_e = np.asarray(res_e.best_conductance)
+    phi_b = np.asarray(res_b.best_conductance)
+    ok = np.isfinite(phi_e) & np.isfinite(phi_b)
+    dphi = float(np.mean(np.abs(phi_e[ok] - phi_b[ok]))) if ok.any() else 0.0
+    # bound check at the worst (longest) sweep of the batch
+    deg = np.asarray(g.deg)
+    order = np.asarray(res_e.order)
+    sup = int(np.asarray(res_e.support).max())
+    s_worst = int(np.asarray(res_e.support).argmax())
+    degs = deg[order[s_worst, :sup]]
+    vol = np.cumsum(degs)
+    half = bounds.sweep_conductance_interval(
+        degs, np.minimum(vol, 2 * g.m - vol), sk.total_bits, sk.num_hashes)
+    emit("localcluster/e2e_bf", us_e2e,
+         f"seeds_per_s={SEEDS / (us_e2e / 1e6):.0f},mean_dphi={dphi:.4f},"
+         f"bound_last={half[-1]:.3f}")

@@ -26,12 +26,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (accuracy_pairs, adaptive_bloom, algo_speedup, construction,
-                   engine_bench, heuristics, kernels_bench, roofline, scaling,
-                   stream_bench, tc_estimators)
+                   engine_bench, heuristics, kernels_bench, localcluster,
+                   roofline, scaling, stream_bench, tc_estimators)
     suites = [
         ("kernels", kernels_bench.run),
         ("engine", engine_bench.run),
         ("stream", stream_bench.run),
+        ("localcluster", localcluster.run),
         ("fig3_accuracy", accuracy_pairs.run),
         ("fig4-6_speedup", algo_speedup.run),
         ("table7_tc", tc_estimators.run),
@@ -41,7 +42,7 @@ def main() -> None:
         ("adaptive_bloom", adaptive_bloom.run),
         ("roofline", roofline.run),
     ]
-    smoke_suites = {"kernels", "engine", "stream"}
+    smoke_suites = {"kernels", "engine", "stream", "localcluster"}
     if args.only is not None:
         suites = [s for s in suites if s[0] == args.only]
         if not suites:

@@ -68,6 +68,16 @@ def main():
     print(f"\nengine session: TC={tc_sess:.0f} mean-LCC={lcc_mean:.3f} "
           f"4-cliques={cc4:.0f} (one sketch, one edge pass)")
 
+    # 8) local clustering: PPR push + sweep cut around seed vertices, the
+    #    |N(v) ∩ S| cut increments served by Bloom prefix-filter popcounts
+    import numpy as np
+    seeds = np.array([0, 7, 42])
+    sess_c = engine.session(gc, "bf", storage_budget=2.0)
+    lc = sess_c.local_cluster(seeds, alpha=0.15, eps=1e-4)
+    for i, seed in enumerate(seeds):
+        print(f"local cluster around seed {seed}: |C|={int(lc.best_size[i])} "
+              f"phi={float(lc.best_conductance[i]):.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,6 +1,7 @@
 from .tc import triangle_count
 from .cliques import four_clique_count
 from .clustering import jarvis_patrick
+from .localcluster import LocalClusterResult, local_cluster, ppr_push, sweep_cut
 from .similarity import pair_similarity
 from .linkpred import link_prediction_effectiveness
 
@@ -8,6 +9,10 @@ __all__ = [
     "triangle_count",
     "four_clique_count",
     "jarvis_patrick",
+    "LocalClusterResult",
+    "local_cluster",
+    "ppr_push",
+    "sweep_cut",
     "pair_similarity",
     "link_prediction_effectiveness",
 ]

@@ -1,0 +1,371 @@
+"""Local graph clustering: batched PPR forward push + sketch-gated sweep cuts.
+
+The seed-centric workload (Andersen–Chung–Lang / PPR-Nibble, parallelized as
+in Shun et al. 2016 and frontier-formulated as in GBBS): given seed vertices,
+find low-conductance clusters around them without touching the whole graph's
+combinatorics. Two phases, both expressed as the regular batched tensor work
+the engine already emits:
+
+  1. **Forward push** — approximate personalized PageRank. The frontier is a
+     dense float vector per seed (``r`` residual, ``p`` estimate, both
+     ``[S, n]`` for a seed batch), and one synchronous push step activates
+     *every* vertex over the ACL threshold at once: mass moves to ``p``
+     (teleport share ``alpha``) and propagates to neighbors through an
+     edge-parallel scatter-add over ``graph.edges`` — no per-vertex host
+     loop, no ragged frontier, one `lax.while_loop`.
+
+  2. **Sweep cut** — order vertices by degree-normalized PPR mass and scan
+     prefixes ``S_1 ⊂ S_2 ⊂ …``, picking the prefix with minimum conductance
+     ``φ(S) = cut(S) / min(vol(S), vol(V∖S))``. The expensive term is the
+     per-step ``|N(v_j) ∩ S_{j-1}|`` (cut increment = ``d(v_j) − 2·|N(v_j) ∩
+     S_{j-1}|``). The sketch-gated path replaces it with ProbGraph set
+     algebra: the swept prefix is itself a Bloom filter (exclusive prefix-OR
+     of single-vertex bit rows under the *same* hash family as the
+     neighborhood sketch), so every increment is one AND+popcount between
+     ``B(N(v_j))`` and ``B(S_{j-1})`` — ``bf_edge_intersect``-style work,
+     optionally routed through the Pallas pair kernel. The exact fallback
+     counts swept-rank hits through the padded adjacency.
+
+``core.bounds.sweep_cut_rmse`` / ``bloom_words_for_conductance`` make the
+sketch knob quantitative: size the Bloom filter from a target conductance
+error instead of guessing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ... import engine as eng
+from ..estimators import bf_intersection_and_from_ones
+from ..graph import Graph
+from ..sketches import SketchSet, bloom_rows
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LocalClusterResult:
+    """Per-seed output of :func:`local_cluster` (a batched sweep).
+
+    Attributes:
+      order:       int32[S, k]   sweep order (vertices by descending p/deg;
+                                 entries past ``support`` are padding).
+      conductance: float32[S, k] conductance of each swept prefix (``inf``
+                                 at invalid prefixes: empty, full-volume, or
+                                 past the seed's support).
+      best_idx:    int32[S]      prefix index minimizing conductance.
+      best_conductance: float32[S] the minimum conductance itself (``inf``
+                                 when the seed admits no valid prefix).
+      best_size:   int32[S]      cluster size = best_idx + 1, or 0 when no
+                                 valid prefix exists (isolated seed /
+                                 whole-volume support) — ``members`` is
+                                 then empty.
+      support:     int32[S]      number of vertices with positive PPR mass
+                                 that entered the sweep (≤ k).
+      ppr:         float32[S, n] the approximate PPR vectors (push output).
+      iterations:  int32         push iterations until convergence/cap.
+    """
+
+    order: jax.Array
+    conductance: jax.Array
+    best_idx: jax.Array
+    best_conductance: jax.Array
+    best_size: jax.Array
+    support: jax.Array
+    ppr: jax.Array
+    iterations: jax.Array
+
+    def members(self, s: int):
+        """Vertex ids of seed ``s``'s best cluster (host-side convenience)."""
+        import numpy as np
+        k = int(np.asarray(self.best_size)[s])
+        return np.asarray(self.order)[s, :k]
+
+
+# ----------------------------------------------------------------------------
+# phase 1: batched approximate PPR (ACL forward push, synchronous frontier)
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "max_iters"))
+def _ppr_push_impl(deg: jax.Array, edges: jax.Array, seeds: jax.Array,
+                   alpha, eps, *, n: int, max_iters: int):
+    """Jitted push body over raw arrays (not the Graph pytree, whose static
+    ``n_edges`` would retrace per streaming delta); ``edges`` is pow2-padded
+    with sentinel (n, n) rows whose scatter contributions drop."""
+    deg = deg.astype(jnp.float32)
+    s_batch = seeds.shape[0]
+    thresh = eps * jnp.maximum(deg, 1.0)
+
+    p0 = jnp.zeros((s_batch, n), jnp.float32)
+    r0 = p0.at[jnp.arange(s_batch), seeds].add(1.0)
+
+    def body(state):
+        p, r, it = state
+        active = r >= thresh[None, :]
+        push = jnp.where(active, r, 0.0)
+        # isolated vertices (deg 0) absorb their whole mass into p
+        p = p + jnp.where(deg[None, :] > 0, alpha * push, push)
+        give = jnp.where(deg[None, :] > 0,
+                         (1.0 - alpha) * push / jnp.maximum(deg[None, :], 1.0),
+                         0.0)
+        # edge-parallel propagate: each canonical edge carries mass both
+        # ways; sentinel pad rows scatter out of bounds and are dropped
+        recv = jnp.zeros_like(r)
+        recv = recv.at[:, edges[:, 1]].add(
+            give[:, jnp.minimum(edges[:, 0], n - 1)], mode="drop")
+        recv = recv.at[:, edges[:, 0]].add(
+            give[:, jnp.minimum(edges[:, 1], n - 1)], mode="drop")
+        return p, jnp.where(active, 0.0, r) + recv, it + 1
+
+    def cond(state):
+        _, r, it = state
+        return jnp.any(r >= thresh[None, :]) & (it < max_iters)
+
+    p, r, iters = jax.lax.while_loop(cond, body, (p0, r0, jnp.int32(0)))
+    return p, r, iters
+
+
+def _padded_edges(graph: Graph) -> jax.Array:
+    """graph.edges padded to a pow2 bucket with sentinel (n, n) rows, so the
+    jitted push compiles once per size class instead of once per delta."""
+    m = graph.edges.shape[0]
+    m_b = eng.plan.pow2_bucket(m)
+    if m_b == m:
+        return graph.edges
+    pad = jnp.full((m_b - m, 2), graph.n, graph.edges.dtype)
+    return jnp.concatenate([graph.edges, pad], axis=0)
+
+
+def ppr_push(graph: Graph, seeds: jax.Array, alpha: float = 0.15,
+             eps: float = 1e-4, max_iters: int = 200):
+    """Batched ACL forward push: approximate PPR for a batch of seeds.
+
+    Args:
+      graph:     the (frozen or view) graph; only ``deg`` and ``edges`` are
+                 read, so the result is independent of adjacency padding.
+      seeds:     int32[S] seed vertex ids (duplicates allowed — pad a batch
+                 by repeating any seed and drop the copies).
+      alpha:     teleport probability of the underlying random walk.
+      eps:       push tolerance — iterate until every residual satisfies
+                 ``r[v] < eps·max(d(v), 1)``.
+      max_iters: hard cap on synchronous push rounds.
+
+    Returns:
+      ``(p, r, iters)``: PPR estimates float32[S, n], final residuals
+      float32[S, n], and the int32 number of rounds executed. The ACL
+      invariant bounds the truncation: ``p ≤ ppr_exact ≤ p + eps·deg``
+      coordinatewise (in exact arithmetic). The implementation is jitted
+      with ``alpha``/``eps`` as traced scalars and the edge list padded to a
+      pow2 bucket, so repeated serving calls — including across streaming
+      deltas, where ``m`` changes every batch — reuse one compiled program
+      per (n, edge-bucket, seed-batch) class.
+    """
+    seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
+    return _ppr_push_impl(graph.deg, _padded_edges(graph), seeds,
+                          jnp.float32(alpha), jnp.float32(eps),
+                          n=graph.n, max_iters=max_iters)
+
+
+def ppr_power_iteration(graph: Graph, seeds: jax.Array, alpha: float = 0.15,
+                        iters: int = 200) -> jax.Array:
+    """Dense power-iteration PPR reference: ``p ← α·e_s + (1−α)·A D⁻¹ p``.
+
+    The fixed point this converges to is exactly what :func:`ppr_push`
+    approximates (same teleport convention), so it serves as the test oracle.
+    Returns float32[S, n].
+    """
+    n = graph.n
+    deg = graph.deg.astype(jnp.float32)
+    edges = graph.edges
+    seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
+    s_batch = seeds.shape[0]
+    e_s = jnp.zeros((s_batch, n), jnp.float32).at[
+        jnp.arange(s_batch), seeds].add(1.0)
+
+    def step(p, _):
+        give = jnp.where(deg[None, :] > 0, p / jnp.maximum(deg[None, :], 1.0),
+                         0.0)
+        recv = jnp.zeros_like(p)
+        recv = recv.at[:, edges[:, 1]].add(give[:, edges[:, 0]])
+        recv = recv.at[:, edges[:, 0]].add(give[:, edges[:, 1]])
+        # deg-0 vertices hold their mass (matches push's absorb-to-p)
+        hold = jnp.where(deg[None, :] > 0, 0.0, p)
+        return alpha * e_s + (1.0 - alpha) * (recv + hold), None
+
+    p, _ = jax.lax.scan(step, e_s, None, length=iters)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# phase 2: sweep cut with sketch-gated cut increments
+# ----------------------------------------------------------------------------
+
+def _vertex_bloom_rows(order: jax.Array, n: int, words: int, num_hashes: int,
+                       seed: int) -> jax.Array:
+    """uint32[S, k, words]: single-vertex Bloom rows for the sweep order.
+
+    Built through the one shared builder (``sketches.bloom_rows`` on
+    ``[S·k, 1]`` pseudo-adjacency rows; the sweep-pad sentinel ``n`` is
+    exactly the builder's pad value), so the prefix filter *provably* uses
+    the same hash family and bit layout as the neighborhood sketch — the
+    property the AND/OR estimators depend on.
+    """
+    s_batch, k = order.shape
+    rows = bloom_rows(order.reshape(-1, 1), n=n, words=words,
+                      num_hashes=num_hashes, seed=seed)
+    return rows.reshape(s_batch, k, words)
+
+
+def _prefix_intersections(deg: jax.Array, adj: jax.Array, n: int,
+                          order: jax.Array, sketch: Optional[SketchSet],
+                          plan: eng.EnginePlan) -> jax.Array:
+    """float32[S, k]: |N(order_j) ∩ {order_0..order_{j-1}}| per sweep step.
+
+    Sketch path (kind == "bf"): exclusive prefix-OR of single-vertex Bloom
+    rows gives ``B(S_{j-1})``; one AND+popcount against the neighborhood row
+    ``B(N(order_j))`` per step (through the Pallas pair kernel when
+    ``plan.use_kernel``). Exact path: gather each swept vertex's padded
+    adjacency row and count neighbors whose sweep rank is smaller.
+    """
+    s_batch, k = order.shape
+    if sketch is not None and sketch.kind == "bf":
+        words = sketch.data.shape[1]
+        total_bits = words * 32
+        elem = _vertex_bloom_rows(order, n, words, sketch.num_hashes,
+                                  sketch.seed)
+        prefix_inc = jax.lax.associative_scan(jnp.bitwise_or, elem, axis=1)
+        prefix = jnp.concatenate(
+            [jnp.zeros((s_batch, 1, words), jnp.uint32),
+             prefix_inc[:, :-1]], axis=1)                    # exclusive
+        safe = jnp.where(order < n, order, 0)
+        nbr_rows = jnp.take(sketch.data, safe, axis=0)       # [S, k, words]
+        # inclusion–exclusion (the paper's OR estimator): both set sizes are
+        # *known exactly* here — |N(v_j)| = d(v_j) and |S_{j-1}| = j — so only
+        # the union size needs estimating. Unlike the AND form this stays
+        # accurate while the prefix filter fills up: it saturates with the
+        # union's fill fraction, which core.bounds.sweep_cut_rmse models.
+        if plan.use_kernel:
+            from repro.kernels import ops as kops
+            ones_and = kops.bf_intersect_pairs(
+                nbr_rows.reshape(-1, words), prefix.reshape(-1, words),
+                block_w=plan.block_w).reshape(s_batch, k)
+        else:
+            ones_and = jnp.sum(jax.lax.population_count(nbr_rows & prefix),
+                               axis=-1).astype(jnp.int32)
+        ones_nbr = jnp.sum(jax.lax.population_count(nbr_rows), axis=-1)
+        ones_pre = jnp.sum(jax.lax.population_count(prefix), axis=-1)
+        ones_or = ones_nbr + ones_pre - ones_and
+        union_est = bf_intersection_and_from_ones(ones_or, total_bits,
+                                                  sketch.num_hashes)
+        d_j = jnp.take(deg, safe).astype(jnp.float32)
+        psize = jnp.arange(k, dtype=jnp.float32)[None, :]    # |S_{j-1}| = j
+        est = d_j + psize - union_est
+        # an intersection is bounded by the smaller of the two true sets
+        return jnp.clip(est, 0.0, jnp.minimum(d_j, psize))
+
+    # exact fallback: rank-compare through the padded adjacency
+    rank = jnp.full((s_batch, n + 1), k, jnp.int32)
+    rank = rank.at[jnp.arange(s_batch)[:, None],
+                   jnp.minimum(order, n)].set(
+        jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (s_batch, k)))
+    rank = rank.at[:, n].set(k)                    # adjacency pad sentinel
+    nbrs = jnp.take(adj, jnp.where(order < n, order, 0),
+                    axis=0)                                  # [S, k, cap]
+    nbr_rank = jnp.take_along_axis(
+        rank, nbrs.reshape(s_batch, -1), axis=1).reshape(nbrs.shape)
+    before = nbr_rank < jnp.arange(k, dtype=jnp.int32)[None, :, None]
+    valid = nbrs < n
+    return jnp.sum(before & valid, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "plan"))
+def _sweep_cut_impl(deg: jax.Array, adj: jax.Array, ppr: jax.Array,
+                    vol_total: jax.Array, sketch: Optional[SketchSet],
+                    plan: eng.EnginePlan, *, n: int):
+    """Jitted sweep body over raw arrays; ``vol_total`` (= 2m) arrives as a
+    traced scalar so a streaming delta's changed edge count does not retrace
+    (the Graph pytree's static ``n_edges`` would)."""
+    deg = deg.astype(jnp.float32)
+    score = ppr / jnp.maximum(deg[None, :], 1.0)
+    k = max(1, min(int(plan.sweep_cap), n))
+    top_score, order = jax.lax.top_k(score, k)
+    in_sweep = top_score > 0.0                               # [S, k]
+    support = jnp.sum(in_sweep, axis=1).astype(jnp.int32)
+    order = jnp.where(in_sweep, order, n).astype(jnp.int32)  # pad -> sentinel
+
+    d_j = jnp.where(in_sweep, jnp.take(deg, jnp.minimum(order, n - 1)), 0.0)
+    inter = jnp.where(
+        in_sweep,
+        _prefix_intersections(deg, adj, n, order, sketch, plan), 0.0)
+    vol = jnp.cumsum(d_j, axis=1)
+    cut = jnp.cumsum(d_j - 2.0 * inter, axis=1)
+    cut = jnp.maximum(cut, 0.0)                # sketch noise can dip below 0
+    vol_rest = vol_total - vol
+    denom = jnp.minimum(vol, vol_rest)
+    ok = in_sweep & (denom > 0.0)
+    conductance = jnp.where(ok, cut / jnp.maximum(denom, 1.0), jnp.inf)
+    return order, conductance, support
+
+
+def sweep_cut(graph: Graph, ppr: jax.Array, sketch: Optional[SketchSet] = None,
+              plan: Optional[eng.EnginePlan] = None):
+    """Batched sweep-cut conductance scan over degree-normalized PPR mass.
+
+    Args:
+      graph:  the graph the PPR vectors live on.
+      ppr:    float32[S, n] PPR estimates (from :func:`ppr_push`).
+      sketch: optional SketchSet; a Bloom sketch routes the cut increments
+              through prefix-filter AND+popcounts, anything else (or None)
+              uses the exact rank-compare fallback.
+      plan:   EnginePlan; ``plan.sweep_cap`` bounds the swept prefix length
+              and ``plan.use_kernel`` routes Bloom popcounts through the
+              Pallas pair kernel.
+
+    Returns:
+      ``(order, conductance, support)`` — int32[S, k] sweep order,
+      float32[S, k] per-prefix conductance (inf at invalid prefixes), and
+      int32[S] number of positive-mass vertices swept.
+    """
+    plan = plan if plan is not None else eng.plan_for(graph, sketch)
+    return _sweep_cut_impl(graph.deg, graph.adj, ppr,
+                           jnp.float32(2.0 * graph.m), sketch, plan,
+                           n=graph.n)
+
+
+def local_cluster(graph: Graph, seeds, alpha: float = 0.15, eps: float = 1e-4,
+                  sketch: Optional[SketchSet] = None,
+                  plan: Optional[eng.EnginePlan] = None,
+                  max_iters: int = 200, **kw) -> LocalClusterResult:
+    """Seed-centric local clustering: PPR push then a sweep-cut scan.
+
+    Args:
+      graph:  frozen Graph or a streaming ``DynamicGraph.view()``.
+      seeds:  int32[S] (or scalar) seed vertex ids.
+      alpha:  PPR teleport probability.
+      eps:    push tolerance (smaller = larger support, better clusters).
+      sketch: optional SketchSet for sketch-gated cut increments ("bf" kind
+              engages the prefix-filter path; others fall back to exact).
+      plan:   EnginePlan or legacy kwargs (``sweep_cap=``, ``use_kernel=``).
+      max_iters: push round cap.
+
+    Returns:
+      A :class:`LocalClusterResult` with per-seed sweep order, conductance
+      profile, and the best (minimum-conductance) prefix.
+    """
+    plan = eng.resolve_plan(plan, graph, sketch, kw)
+    seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
+    p, _, iters = ppr_push(graph, seeds, alpha, eps, max_iters)
+    order, conductance, support = sweep_cut(graph, p, sketch, plan)
+    best_idx = jnp.argmin(conductance, axis=1).astype(jnp.int32)
+    best_phi = jnp.take_along_axis(conductance, best_idx[:, None],
+                                   axis=1)[:, 0]
+    # an all-inf profile (isolated seed, no valid prefix) has no cluster:
+    # report size 0 rather than a bogus 1-element prefix of sentinel ids
+    best_size = jnp.where(jnp.isfinite(best_phi), best_idx + 1, 0)
+    return LocalClusterResult(
+        order=order, conductance=conductance, best_idx=best_idx,
+        best_conductance=best_phi,
+        best_size=best_size, support=support, ppr=p, iterations=iters)

@@ -133,6 +133,86 @@ def tc_minhash_deviation_bound_bounded_degree(degrees: np.ndarray, k: int, t: fl
 
 
 # ---------------------------------------------------------------------------
+# Sweep-cut conductance bounds (local clustering; Prop IV.1 accumulated)
+# ---------------------------------------------------------------------------
+
+def sweep_cut_rmse(prefix_degrees: np.ndarray, total_bits: int,
+                   num_hashes: int) -> np.ndarray:
+    """Cumulative RMSE of the sketch-gated sweep *cut* after each step.
+
+    Step j of a sweep estimates ``|N(v_j) ∩ S_{j-1}|`` by inclusion–exclusion
+    (both set sizes are known exactly, only ``|N(v_j) ∪ S_{j-1}|`` is
+    estimated from the OR of the two filters), so the step error is the
+    Swamidass size-estimator error at the *union* size ``d(v_j) + j`` — the
+    Prop IV.1 MSE expression evaluated there, which correctly explodes as
+    the prefix filter saturates. Each estimate enters the running cut with
+    weight 2, and consecutive steps share the growing prefix filter, so
+    their errors *correlate* —
+    the right accumulation is the sum of per-step RMSEs (worst case under
+    arbitrary correlation), not the independent-errors square root:
+
+        err_scale(cut_j) = 2 · Σ_{i≤j} RMSE(d(v_i) + i)
+
+    (empirically the observed drift tracks this sum; the sqrt-of-variances
+    form underestimates it by >5× on Kronecker sweeps). ``prefix_degrees``
+    is the degree sequence in sweep order; returns the vector of cumulative
+    cut error scales (one per prefix). Divide by
+    ``min(vol(S_j), vol(V∖S_j))`` for the conductance error scale.
+    """
+    degs = np.asarray(prefix_degrees, dtype=np.float64)
+    union = degs + np.arange(degs.size, dtype=np.float64)
+    mse = np.maximum(_bf_and_mse(union, total_bits, num_hashes), 0.0)
+    return 2.0 * np.cumsum(np.sqrt(mse))
+
+
+def sweep_conductance_interval(prefix_degrees: np.ndarray, volumes: np.ndarray,
+                               total_bits: int, num_hashes: int,
+                               delta: float = 0.05) -> np.ndarray:
+    """Half-width of a (1−δ) Chebyshev interval on each prefix's conductance.
+
+    ``|φ_est(S_j) − φ(S_j)| ≤ RMSE(cut_j) / (sqrt(δ)·denom_j)`` with
+    probability ≥ 1−δ, where ``denom_j = min(vol(S_j), 2m − vol(S_j))``
+    passed in as ``volumes``. Vectorized over prefixes.
+    """
+    rmse = sweep_cut_rmse(prefix_degrees, total_bits, num_hashes)
+    denom = np.maximum(np.asarray(volumes, dtype=np.float64), 1.0)
+    return rmse / (np.sqrt(float(delta)) * denom)
+
+
+def bloom_words_for_conductance(target_err: float, typical_degree: float,
+                                sweep_len: int, volume: float,
+                                num_hashes: int = 2, delta: float = 0.05,
+                                max_words: int = 1 << 16) -> int:
+    """Smallest Bloom words/vertex whose sweep conductance error ≤ target.
+
+    Inverts :func:`sweep_conductance_interval` at a homogeneous model sweep
+    (``sweep_len`` steps, every step at ``typical_degree``, denominator
+    ``volume``) by doubling the word count until the (1−δ) interval half-width
+    at the *last* prefix — the worst one, errors only accumulate — drops
+    under ``target_err``. The streaming/serving path uses this to size the
+    sketch from a conductance-error budget instead of a storage budget.
+
+    Raises ``ValueError`` when even ``max_words`` cannot meet the target
+    (rather than silently returning an undersized sketch) — shorten the
+    sweep, raise δ, or relax the target.
+    """
+    degs = np.full(max(int(sweep_len), 1), float(typical_degree))
+    words = 2
+    while True:
+        half = sweep_conductance_interval(
+            degs, np.full_like(degs, float(volume)), words * 32, num_hashes,
+            delta)[-1]
+        if half <= target_err:
+            return int(words)
+        if words >= max_words:
+            raise ValueError(
+                f"target conductance error {target_err} unreachable at "
+                f"max_words={max_words} (half-width {half:.3g}); shorten "
+                "the sweep, raise delta, or relax the target")
+        words *= 2
+
+
+# ---------------------------------------------------------------------------
 # KMV bounds (Prop A.7 / A.9) — regularized incomplete beta via series
 # ---------------------------------------------------------------------------
 

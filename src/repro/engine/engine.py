@@ -32,7 +32,8 @@ from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
                    order_edges_by_hub, plan_for, pow2_bucket)
 
 _PLAN_KWARGS = ("edge_chunk", "block_e", "block_w", "use_kernel",
-                "degree_order", "estimator", "variant", "shard_edges")
+                "degree_order", "estimator", "variant", "shard_edges",
+                "sweep_cap")
 
 
 def resolve_plan(plan: Optional[EnginePlan], graph: Graph,
@@ -83,6 +84,7 @@ def sum_edge_cardinalities(graph: Graph, sketch: Optional[SketchSet],
         edges, _ = order_edges_by_hub(graph, edges)   # sums need no unsort
 
     def chunk(pairs, mask):
+        """Masked partial sum of one edge chunk's cardinalities."""
         return jnp.sum(jnp.where(mask, fn(pairs), 0.0))
 
     if plan.shard_edges:
@@ -119,6 +121,7 @@ def _sharded_fold(edges: jax.Array, chunk_fn, plan: EnginePlan) -> jax.Array:
     @functools.partial(shard_map, mesh=mesh, in_specs=(spec, mask_spec),
                        out_specs=jax.sharding.PartitionSpec())
     def fold_shard(edge_shard, mask_shard):
+        """Per-shard fold, psum-reduced over the edge axes."""
         local = fold_edges_masked(edge_shard, mask_shard, chunk_fn, plan)
         for ax in axes:
             local = jax.lax.psum(local, ax)
@@ -243,9 +246,11 @@ class MiningSession:
         return self._edge_cards
 
     def triangle_count(self) -> jax.Array:
+        """Scalar TC estimate from the shared per-edge cardinality pass."""
         return jnp.sum(self.edge_cardinalities()) / 3.0
 
     def local_clustering(self) -> jax.Array:
+        """Per-vertex clustering coefficients float32[n] (shared pass)."""
         from ..core.algorithms.tc import local_clustering_coefficient
         return local_clustering_coefficient(
             self.graph, self.sketch, plan=self.plan,
@@ -253,20 +258,43 @@ class MiningSession:
 
     def jarvis_patrick(self, similarity: str = "common",
                        threshold: float = 2.0):
+        """Jarvis–Patrick clustering ``(labels int32[n], num_clusters)``."""
         from ..core.algorithms.clustering import jarvis_patrick
         return jarvis_patrick(self.graph, self.sketch, similarity, threshold,
                               plan=self.plan,
                               edge_cards=self.edge_cardinalities())
 
     def four_clique_count(self, **kw) -> jax.Array:
+        """Scalar 4-clique count estimate (3-way sketch intersections)."""
         from ..core.algorithms.cliques import four_clique_count
         return four_clique_count(self.graph, self.sketch, plan=self.plan, **kw)
 
     def similarity(self, pairs: jax.Array, measure: str = "jaccard"
                    ) -> jax.Array:
+        """Similarity scores float32[P] for vertex pairs int32[P, 2]."""
         from ..core.algorithms.similarity import pair_similarity
         return pair_similarity(self.graph, pairs, measure, self.sketch,
                                plan=self.plan)
+
+    def local_cluster(self, seeds, alpha: float = 0.15, eps: float = 1e-4,
+                      **kw):
+        """Seed-centric local clustering (PPR push + sketch-gated sweep).
+
+        Args:
+          seeds: int32[S] (or scalar) seed vertex ids; the whole batch runs
+                 as one vmapped push + sweep.
+          alpha: PPR teleport probability.
+          eps:   push tolerance (residual threshold per unit degree).
+          **kw:  forwarded to :func:`core.algorithms.localcluster.local_cluster`
+                 (e.g. ``max_iters=``).
+
+        Returns:
+          A :class:`~repro.core.algorithms.localcluster.LocalClusterResult`
+          with per-seed sweep order, conductance profile and best prefix.
+        """
+        from ..core.algorithms.localcluster import local_cluster
+        return local_cluster(self.graph, seeds, alpha, eps, self.sketch,
+                             plan=self.plan, **kw)
 
     def edge_similarity(self, measure: str = "jaccard") -> jax.Array:
         """Similarity scores over graph.edges from the cached shared pass."""
@@ -353,6 +381,7 @@ class MiningSession:
         return int(dc.n_recompute)
 
     def stats(self) -> dict:
+        """Session facts: graph sizes, sketch kind/bytes, JSON-able plan."""
         sk = self.sketch
         return {
             "n": self.graph.n, "m": self.graph.m,

@@ -34,6 +34,8 @@ class EnginePlan:
       variant:      1-Hash Jaccard variant ("union" | "naive").
       shard_edges:  shard_map the edge fold over the active mesh's edge axis
                     (see repro.distributed.sharding; no-op without a mesh).
+      sweep_cap:    max swept prefix length for local clustering sweep cuts
+                    (bounds the per-seed sweep tensor shapes).
     """
 
     edge_chunk: int = 65536
@@ -44,8 +46,10 @@ class EnginePlan:
     estimator: Optional[str] = None
     variant: str = "union"
     shard_edges: bool = False
+    sweep_cap: int = 512
 
     def with_(self, **overrides) -> "EnginePlan":
+        """Return a copy of this plan with the given fields replaced."""
         return dataclasses.replace(self, **overrides)
 
 
@@ -124,6 +128,7 @@ def fold_edges_masked(edges: jax.Array, mask: jax.Array, chunk_fn,
         return chunk_fn(edges, mask)
 
     def body(c, xs):
+        """Scan step: accumulate one chunk's masked partial sum."""
         pairs, msk = xs
         return c + chunk_fn(pairs, msk), None
 

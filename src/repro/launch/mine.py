@@ -122,18 +122,31 @@ def mine_session(graph: G.Graph, algos: list[str], storage_budget: float = 0.25,
     """Multi-query mining over ONE shared sketch build (engine.session).
 
     TC, LCC and clustering additionally share a single per-edge cardinality
-    pass; 4-clique reuses the same sketch. Returns {algo: (value, seconds)}.
+    pass; 4-clique and local clustering reuse the same sketch. Returns
+    {algo: (value, seconds)}.
     """
     t0 = time.time()
     sess = ENG.session(graph, "bf", storage_budget=storage_budget,
                        num_hashes=num_hashes, seed=seed, use_kernel=use_kernel)
     jax.block_until_ready(sess.sketch.data)
     results = {"build": (sess.stats()["sketch_bytes"], time.time() - t0)}
+
+    def run_localcluster():
+        # deterministic 8-seed batch; report the mean best conductance of
+        # the seeds whose sweep found a valid (finite-φ) prefix
+        rng = np.random.default_rng(seed + 7)
+        seeds = rng.integers(0, graph.n, size=8).astype(np.int32)
+        res = sess.local_cluster(seeds, alpha=0.15, eps=1e-4)
+        phi = np.asarray(res.best_conductance)
+        phi = phi[np.isfinite(phi)]
+        return float(phi.mean()) if phi.size else float("nan")
+
     runners = {
         "tc": lambda: float(sess.triangle_count()),
         "lcc": lambda: float(jnp.mean(sess.local_clustering())),
         "4clique": lambda: float(sess.four_clique_count()),
         "jp": lambda: int(sess.jarvis_patrick("jaccard", 0.05)[1]),
+        "localcluster": run_localcluster,
     }
     for name in algos:
         if name not in runners:
@@ -151,8 +164,9 @@ def main():
     ap.add_argument("--budget", type=float, default=0.25)
     ap.add_argument("--exact", action="store_true", help="also run exact TC")
     ap.add_argument("--algos", type=str, default="",
-                    help="comma list (tc,lcc,4clique,jp): run a multi-query "
-                         "engine session over one shared sketch build")
+                    help="comma list (tc,lcc,4clique,jp,localcluster): run a "
+                         "multi-query engine session over one shared sketch "
+                         "build")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route BF popcounts through the Pallas block-gather "
                          "kernels (TPU; interpret elsewhere)")

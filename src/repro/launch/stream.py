@@ -3,7 +3,8 @@
 Generates a Kronecker power-law graph, withholds a fraction of its edges as
 a timestamped arrival stream, and replays them in delta batches against a
 :class:`repro.stream.StreamSession` — interleaving each delta with a batched
-query flush (similarity / membership / link prediction / triangle count)
+query flush (similarity / membership / link prediction / triangle count /
+local clustering)
 through :class:`repro.stream.BatchedQueryServer`. Per batch it reports what
 incremental maintenance saved (rows updated in place vs selectively rebuilt
 vs the full-rebuild alternative), the host → device bytes the delta uploaded
@@ -43,7 +44,8 @@ def build_stream(scale: int, edge_factor: int, stream_frac: float, seed: int):
     return g.n, edges[order[:split]], edges[order[split:]]
 
 
-def verify_against_static(st: StreamSession, pairs: np.ndarray) -> dict:
+def verify_against_static(st: StreamSession, pairs: np.ndarray,
+                          lc_seed: int | None = None) -> dict:
     """From-scratch engine.session on the equivalent static graph."""
     gs = G.from_edge_array(st.dyn.n, st.dyn.edge_array())
     mt = st.maintainer
@@ -56,13 +58,25 @@ def verify_against_static(st: StreamSession, pairs: np.ndarray) -> dict:
     tc_stream = float(st.triangle_count())
     sim_static = np.asarray(sess.similarity(pairs, "jaccard"))
     sim_stream = np.asarray(st.similarity(pairs, "jaccard"))
-    return {
+    exact = (tc_stream == tc_static
+             and np.array_equal(sim_stream, sim_static))
+    out = {
         "tc_abs_err": abs(tc_stream - tc_static),
         "sim_max_err": float(np.max(np.abs(sim_stream - sim_static)))
         if pairs.size else 0.0,
-        "exact_match": tc_stream == tc_static
-        and np.array_equal(sim_stream, sim_static),
     }
+    if lc_seed is not None:
+        lc_static = sess.local_cluster(np.array([lc_seed], np.int32),
+                                       alpha=0.15, eps=1e-3)
+        lc_stream = st.local_cluster(np.array([lc_seed], np.int32),
+                                     alpha=0.15, eps=1e-3)
+        out["lc_phi_abs_err"] = abs(
+            float(lc_static.best_conductance[0])
+            - float(lc_stream.best_conductance[0]))
+        exact = exact and np.array_equal(
+            np.asarray(lc_static.conductance), np.asarray(lc_stream.conductance))
+    out["exact_match"] = exact
+    return out
 
 
 def main():
@@ -139,21 +153,28 @@ def main():
         server.submit_membership(int(rng.integers(0, n)),
                                  rng.integers(0, n, size=16))
         server.submit_link_prediction(int(rng.integers(0, n)), top_k=4)
+        lc_seed = int(rng.integers(0, n))
+        lc_rid = server.submit_local_cluster(lc_seed, alpha=0.15, eps=1e-3)
         tc_rid = server.submit_triangle_count()
         t0 = time.perf_counter()
         answers = server.flush()
         dt_query = time.perf_counter() - t0
 
+        lc = answers[lc_rid].value
         row = {"batch": b, "m": st.dyn.m, "delta_s": round(dt_delta, 4),
                "query_s": round(dt_query, 4),
-               "tc": answers[tc_rid].value, **info}
+               "tc": answers[tc_rid].value,
+               "localcluster": {"size": lc["size"],
+                                "conductance": lc["conductance"]},
+               **info}
         if args.verify:
-            row["verify"] = verify_against_static(st, qpairs)
+            row["verify"] = verify_against_static(st, qpairs, lc_seed)
         batch_rows.append(row)
         print(f"[{b:03d}] m={row['m']} +{info['inserted']} -{info['deleted']} "
               f"tc={row['tc']:.1f} recomputed={info['cards_recomputed']}"
               f"/carried={info['cards_carried']} "
               f"rebuilt={info['rows_rebuilt_now']} "
+              f"lc(|C|={lc['size']},phi={lc['conductance']:.3f}) "
               f"upload={info['bytes_uploaded'] / 1024:.1f}KiB "
               f"delta={dt_delta*1e3:.1f}ms query={dt_query*1e3:.1f}ms"
               + (f" exact={row['verify']['exact_match']}" if args.verify

@@ -55,6 +55,7 @@ class DeltaResult:
 
     @property
     def is_noop(self) -> bool:
+        """True when the delta changed nothing (all edges already as asked)."""
         return self.inserted.size == 0 and self.deleted.size == 0
 
     def insert_rows(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -100,6 +101,7 @@ class TrafficMeter:
         self.steps = 0              # committed delta/flush traffic steps
 
     def begin_delta(self):
+        """Reset the per-delta byte counter (called at each delta's start)."""
         self.bytes_delta = 0
 
     def commit_step(self):
@@ -108,6 +110,7 @@ class TrafficMeter:
         self.steps += 1
 
     def put(self, arr: np.ndarray, init: bool = False) -> jax.Array:
+        """Upload a host buffer, metering its bytes (init vs delta path)."""
         host = np.array(arr, copy=True) if init else np.ascontiguousarray(arr)
         if init:
             self.bytes_init += host.nbytes
@@ -117,6 +120,7 @@ class TrafficMeter:
         return jnp.asarray(host)
 
     def stats(self) -> dict:
+        """Upload accounting: init/total/last-delta bytes and step count."""
         return {
             "bytes_init": self.bytes_init,
             "bytes_total": self.bytes_total,
@@ -287,12 +291,14 @@ class DynamicGraph:
     @classmethod
     def from_edges(cls, n: int, edges, headroom: float = 1.5,
                    min_width: int = 4) -> "DynamicGraph":
+        """Build from a raw edge array (duplicates/self-loops dropped)."""
         keys = canonical_edge_keys(n, edges)
         deg, adj = _build_adjacency(n, keys, headroom, min_width)
         return cls(n, keys, deg, adj, headroom)
 
     @classmethod
     def from_graph(cls, graph: Graph, headroom: float = 1.5) -> "DynamicGraph":
+        """Build from a frozen :class:`~repro.core.graph.Graph`."""
         return cls.from_edges(graph.n, np.asarray(graph.edges),
                               headroom=headroom)
 
@@ -302,13 +308,16 @@ class DynamicGraph:
 
     @property
     def m(self) -> int:
+        """Current number of (canonical, undirected) edges."""
         return int(self.edge_keys.shape[0])
 
     @property
     def capacity(self) -> int:
+        """Adjacency row width (degree headroom included)."""
         return int(self.adj.shape[1])
 
     def neighbors(self, v: int) -> np.ndarray:
+        """Sorted neighbor ids of ``v`` (host view, no padding)."""
         return self.adj[v, :self.deg[v]]
 
     def edge_array(self) -> np.ndarray:
@@ -417,17 +426,35 @@ class DynamicGraph:
             grown[:, :self.capacity] = self.adj
             self.adj = grown
 
-        add = _partner_lists(ins_uv)
-        drop = _partner_lists(del_uv)
-        for v in touched:
-            nbrs = self.adj[v, :self.deg[v]]
-            if v in drop:
-                nbrs = nbrs[~np.isin(nbrs, drop[v])]
-            if v in add:
-                nbrs = np.concatenate([nbrs, add[v]])
-            nbrs = np.sort(nbrs)
-            self.adj[v, :nbrs.size] = nbrs
-            self.adj[v, nbrs.size:] = n
+        # vectorized touched-row rewrite (np.unique/offset-scatter, the
+        # DeltaResult.insert_rows technique — no per-vertex Python loop):
+        # collect the touched rows' surviving half-edges plus the inserted
+        # ones, lexsort by (src, dst), and scatter each group back into its
+        # row at within-group rank. Bit-identical to the old per-row
+        # delete/concat/sort because both produce ascending neighbor lists
+        # padded with the sentinel n.
+        old_counts = old_deg_touched.astype(np.int64)
+        mask = np.arange(self.capacity)[None, :] < old_counts[:, None]
+        src = np.repeat(touched, old_counts)
+        dst = self.adj[touched][mask].astype(np.int64)
+        if del_uv.size:
+            del_keys = np.concatenate([del_uv[:, 0] * n + del_uv[:, 1],
+                                       del_uv[:, 1] * n + del_uv[:, 0]])
+            keep = ~np.isin(src * n + dst, del_keys)
+            src, dst = src[keep], dst[keep]
+        if ins_uv.size:
+            src = np.concatenate([src, ins_uv[:, 0], ins_uv[:, 1]])
+            dst = np.concatenate([dst, ins_uv[:, 1], ins_uv[:, 0]])
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        rows_new = np.full((touched.size, self.capacity), n, dtype=np.int32)
+        if src.size:
+            verts, start = np.unique(src, return_index=True)
+            counts = np.diff(np.append(start, src.size))
+            row = np.repeat(np.searchsorted(touched, verts), counts)
+            col = np.arange(src.size) - np.repeat(start, counts)
+            rows_new[row, col] = dst
+        self.adj[touched] = rows_new
         self.deg = new_deg.astype(np.int32)
         delta = DeltaResult(ins_uv, del_uv, touched, dirty, self.version)
         if self._device is not None:
@@ -468,14 +495,6 @@ def _decode_keys(n: int, keys: np.ndarray) -> np.ndarray:
     if keys.size == 0:
         return np.zeros((0, 2), dtype=np.int64)
     return np.stack([keys // n, keys % n], axis=1)
-
-
-def _partner_lists(uv: np.ndarray) -> dict:
-    out: dict = {}
-    for u, v in uv:
-        out.setdefault(int(u), []).append(int(v))
-        out.setdefault(int(v), []).append(int(u))
-    return {v: np.asarray(ps, dtype=np.int32) for v, ps in out.items()}
 
 
 def _build_adjacency(n: int, keys: np.ndarray, headroom: float,

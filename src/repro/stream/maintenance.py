@@ -68,6 +68,7 @@ class ErrorBudgetPolicy:
     max_stale: int = 1 << 30
 
     def allowed_stale(self, sketch: SketchSet, degrees: np.ndarray) -> np.ndarray:
+        """Per-row stale-count budget at the given degrees (0 = strict)."""
         if self.rel_tolerance <= 0.0:
             return np.zeros(np.shape(degrees), dtype=np.float64)
         if sketch.kind == "bf":
@@ -331,6 +332,7 @@ class SketchMaintainer:
         return dirty_ids
 
     def stats(self) -> dict:
+        """Maintenance counters: incremental rows, rebuilds, staleness."""
         return {
             "kind": self.kind,
             "rows_incremental": self.rows_incremental,

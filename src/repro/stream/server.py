@@ -1,7 +1,8 @@
 """Batched query serving over a live StreamSession.
 
-Requests (similarity / link-prediction / membership / triangle-count)
-accumulate in a queue; ``flush()`` groups them, pads each group to fixed
+Requests (similarity / link-prediction / membership / triangle-count /
+local clustering) accumulate in a queue; ``flush()`` groups them, pads each
+group to fixed
 batch shapes (powers of two, so XLA recompiles stay bounded under arbitrary
 traffic), and answers everything through the engine seam — one
 ``pair_cardinality_fn`` evaluation serves *all* pair-scored requests in a
@@ -30,6 +31,8 @@ from .session import StreamSession
 
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
+    """One answered request: value plus latency/staleness provenance."""
+
     request_id: int
     kind: str
     value: object
@@ -46,7 +49,7 @@ class QueryResult:
 @dataclasses.dataclass
 class _Pending:
     request_id: int
-    kind: str                       # similarity | linkpred | membership | tc
+    kind: str          # similarity | linkpred | membership | tc | localcluster
     measure: str
     pairs: Optional[np.ndarray]     # [P, 2] for pair-scored kinds
     payload: dict
@@ -110,9 +113,25 @@ class BatchedQueryServer:
                             candidates=np.asarray(candidates, dtype=np.int32))
 
     def submit_triangle_count(self) -> int:
+        """Triangle-count query over the live graph (shared engine pass)."""
         return self._submit("tc")
 
+    def submit_local_cluster(self, seed: int, alpha: float = 0.15,
+                             eps: float = 1e-4) -> int:
+        """Seed-centric local cluster query (``localcluster(seed, α, ε)``).
+
+        All localcluster requests sharing ``(alpha, eps)`` in one flush run
+        as a single pow2-padded seed batch through the vmapped PPR push +
+        sweep — the local-clustering analogue of the shared cardinality
+        pass. The answer value is a dict with ``members`` (int32[size]
+        vertex ids of the best cluster), ``conductance``, ``size`` and
+        ``support``.
+        """
+        return self._submit("localcluster", "", seed=int(seed),
+                            alpha=float(alpha), eps=float(eps))
+
     def pending_count(self) -> int:
+        """Number of submitted-but-unflushed requests."""
         return len(self._queue)
 
     # ------------------------------------------------------------------
@@ -156,6 +175,33 @@ class BatchedQueryServer:
                     jnp.asarray(dv_all[off:off + k]), p.measure))
                 off += k
 
+        # one batched push + sweep per (alpha, eps) localcluster group
+        lc_reqs = [p for p in queue if p.kind == "localcluster"]
+        lc_answers: Dict[int, dict] = {}
+        for key in sorted({(p.payload["alpha"], p.payload["eps"])
+                           for p in lc_reqs}):
+            group = [p for p in lc_reqs
+                     if (p.payload["alpha"], p.payload["eps"]) == key]
+            seeds = np.array([p.payload["seed"] for p in group], np.int32)
+            # pad with a repeat of the first seed (dropped below); the pow2
+            # bucket keeps one compiled push/sweep per batch size class
+            padded = np.full(pow2_bucket(seeds.size), seeds[0], np.int32)
+            padded[:seeds.size] = seeds
+            self._real_rows += seeds.size
+            self._padded_rows += padded.shape[0]
+            res = self.stream.local_cluster(padded, alpha=key[0], eps=key[1])
+            sizes = np.asarray(res.best_size)
+            phis = np.asarray(res.best_conductance)
+            sup = np.asarray(res.support)
+            order = np.asarray(res.order)
+            for i, p in enumerate(group):
+                lc_answers[p.request_id] = {
+                    "members": order[i, :sizes[i]],
+                    "conductance": float(phis[i]),
+                    "size": int(sizes[i]),
+                    "support": int(sup[i]),
+                }
+
         out: Dict[int, QueryResult] = {}
         for p in queue:
             if p.kind == "similarity":
@@ -176,6 +222,8 @@ class BatchedQueryServer:
                     p.payload["u"], padded))[:cand.shape[0]]
             elif p.kind == "tc":
                 value = float(sess.triangle_count())
+            elif p.kind == "localcluster":
+                value = lc_answers[p.request_id]
             else:  # pragma: no cover - guarded at submit time
                 raise ValueError(p.kind)
             lat = time.perf_counter() - p.t_submit
@@ -188,6 +236,7 @@ class BatchedQueryServer:
         return out
 
     def stats(self) -> dict:
+        """Serving counters: latency percentiles, staleness, pad overhead."""
         lat = np.asarray(self._latencies or [0.0])
         return {
             "served": self._served,

@@ -68,10 +68,12 @@ class StreamSession:
 
     @property
     def graph(self):
+        """The Graph the engine session currently serves (a device view)."""
         return self.session.graph
 
     @property
     def sketch(self) -> Optional[SketchSet]:
+        """The maintained sketch, or None in exact mode."""
         return self.maintainer.sketch if self.maintainer else None
 
     def _device_carry(self, carry_host: Optional[np.ndarray],
@@ -157,13 +159,28 @@ class StreamSession:
     # ------------------------------------------------------------------
 
     def triangle_count(self) -> jax.Array:
+        """Scalar TC estimate over the live graph (shared engine pass)."""
         return self.session.triangle_count()
 
     def local_clustering(self) -> jax.Array:
+        """Per-vertex clustering coefficients float32[n] (live graph)."""
         return self.session.local_clustering()
 
     def similarity(self, pairs, measure: str = "jaccard") -> jax.Array:
+        """Similarity scores float32[P] for vertex pairs on the live graph."""
         return self.session.similarity(jnp.asarray(pairs), measure)
+
+    def local_cluster(self, seeds, alpha: float = 0.15, eps: float = 1e-4,
+                      **kw):
+        """Seed-centric local clustering on the live graph.
+
+        Serves over ``DynamicGraph.view()`` (device-resident) through the
+        engine session, so answers reflect every applied delta; under the
+        strict error-budget policy they are bit-identical to a fresh static
+        session on the equivalent graph. See
+        :meth:`repro.engine.engine.MiningSession.local_cluster`.
+        """
+        return self.session.local_cluster(seeds, alpha, eps, **kw)
 
     def membership(self, u: int, candidates) -> jax.Array:
         """Is each candidate a neighbor of u? BF answers from the sketch row
@@ -177,6 +194,7 @@ class StreamSession:
                                    self.dyn.neighbors(u)))
 
     def stats(self) -> dict:
+        """Session counters: sizes, cache savings, traffic, maintenance."""
         out = {
             "version": self.version,
             "n": self.dyn.n, "m": self.dyn.m,
@@ -236,6 +254,8 @@ class StreamSession:
     @classmethod
     def restore(cls, directory: str, step: Optional[int] = None,
                 plan: Optional[EnginePlan] = None, **plan_kw) -> "StreamSession":
+        """Resume a session from a :meth:`save` checkpoint (latest step by
+        default); the stored config re-creates graph, sketch and policy."""
         if step is None:
             step = store.latest_step(directory)
             if step is None:

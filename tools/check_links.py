@@ -1,0 +1,83 @@
+"""Markdown link checker (stdlib only — runs in CI before any pip install).
+
+Scans the given markdown files/directories for inline links and images
+(``[text](target)``), and fails when a *relative* target does not exist on
+disk or names a missing ``#anchor`` in a markdown file. External links
+(http/https/mailto) are not fetched — CI must not depend on the network.
+
+Usage:
+    python tools/check_links.py README.md docs ROADMAP.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+import unicodedata
+from pathlib import Path
+
+# target = first non-space run after "("; an optional "title" part follows
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+[^)]*)?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (lowercase, spaces->dashes,
+    punctuation dropped)."""
+    text = re.sub(r"[*_`\[\]()]", "", heading.strip())
+    text = unicodedata.normalize("NFKD", text)
+    out = []
+    for ch in text.lower():
+        if ch.isalnum():
+            out.append(ch)
+        elif ch in (" ", "-"):
+            out.append("-")
+    return "".join(out)
+
+
+def anchors_of(md_path: Path) -> set[str]:
+    """All heading anchors a markdown file exposes."""
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {github_anchor(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md_path: Path) -> list[str]:
+    """Return human-readable problems for one markdown file."""
+    problems = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md_path.parent / path_part).resolve() if path_part \
+            else md_path.resolve()
+        if not dest.exists():
+            problems.append(f"{md_path}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors_of(dest):
+                problems.append(f"{md_path}: missing anchor -> {target}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    """Check every .md under the given files/directories; 1 if broken."""
+    files: list[Path] = []
+    for arg in argv or ["README.md", "docs"]:
+        p = Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such path {arg}", file=sys.stderr)
+            return 2
+    problems = [msg for f in files for msg in check_file(f)]
+    for msg in problems:
+        print(msg, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
