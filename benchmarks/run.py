@@ -27,12 +27,13 @@ def main() -> None:
 
     from . import (accuracy_pairs, adaptive_bloom, algo_speedup, construction,
                    engine_bench, heuristics, kernels_bench, localcluster,
-                   roofline, scaling, stream_bench, tc_estimators)
+                   roofline, scaling, serving, stream_bench, tc_estimators)
     suites = [
         ("kernels", kernels_bench.run),
         ("engine", engine_bench.run),
         ("stream", stream_bench.run),
         ("localcluster", localcluster.run),
+        ("serving", serving.run),
         ("fig3_accuracy", accuracy_pairs.run),
         ("fig4-6_speedup", algo_speedup.run),
         ("table7_tc", tc_estimators.run),

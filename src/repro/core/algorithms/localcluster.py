@@ -66,6 +66,9 @@ class LocalClusterResult:
       support:     int32[S]      number of vertices with positive PPR mass
                                  that entered the sweep (≤ k).
       ppr:         float32[S, n] the approximate PPR vectors (push output).
+      residual:    float32[S, n] the final push residuals (the truncated
+                                 mass; nonzero only on neighbors of the
+                                 pushed support).
       iterations:  int32         push iterations until convergence/cap.
     """
 
@@ -76,6 +79,7 @@ class LocalClusterResult:
     best_size: jax.Array
     support: jax.Array
     ppr: jax.Array
+    residual: jax.Array
     iterations: jax.Array
 
     def members(self, s: int):
@@ -83,6 +87,23 @@ class LocalClusterResult:
         import numpy as np
         k = int(np.asarray(self.best_size)[s])
         return np.asarray(self.order)[s, :k]
+
+    def footprint(self, s: int):
+        """Vertex ids seed ``s``'s answer depends on (sorted int64).
+
+        Every vertex that ever held PPR mass or residual during the push:
+        the push dynamics read only these vertices' degrees and incident
+        edges (a vertex whose residual never crossed the ACL threshold still
+        gates on ``r[v] ≥ eps·d(v)``, so its *degree* is load-bearing), and
+        the sweep reads only rows/degrees of the swept support — a subset.
+        This is the serving-tier cache's invalidation set; conductance
+        additionally depends on the total volume ``2m``, which the cache
+        guards separately (see ``stream.cache``).
+        """
+        import numpy as np
+        p = np.asarray(self.ppr[s])
+        r = np.asarray(self.residual[s])
+        return np.nonzero((p > 0) | (r > 0))[0].astype(np.int64)
 
 
 # ----------------------------------------------------------------------------
@@ -357,7 +378,7 @@ def local_cluster(graph: Graph, seeds, alpha: float = 0.15, eps: float = 1e-4,
     """
     plan = eng.resolve_plan(plan, graph, sketch, kw)
     seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
-    p, _, iters = ppr_push(graph, seeds, alpha, eps, max_iters)
+    p, r, iters = ppr_push(graph, seeds, alpha, eps, max_iters)
     order, conductance, support = sweep_cut(graph, p, sketch, plan)
     best_idx = jnp.argmin(conductance, axis=1).astype(jnp.int32)
     best_phi = jnp.take_along_axis(conductance, best_idx[:, None],
@@ -368,4 +389,5 @@ def local_cluster(graph: Graph, seeds, alpha: float = 0.15, eps: float = 1e-4,
     return LocalClusterResult(
         order=order, conductance=conductance, best_idx=best_idx,
         best_conductance=best_phi,
-        best_size=best_size, support=support, ppr=p, iterations=iters)
+        best_size=best_size, support=support, ppr=p, residual=r,
+        iterations=iters)

@@ -8,6 +8,7 @@ from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
                    order_edges_by_hub, plan_for)
 from .engine import (
     DeviceCarry,
+    Footprint,
     MiningSession,
     edge_cardinalities,
     pair_cardinality_fn,
@@ -19,7 +20,8 @@ from .engine import (
 )
 
 __all__ = [
-    "DeviceCarry", "EnginePlan", "MiningSession", "edge_cardinalities",
+    "DeviceCarry", "EnginePlan", "Footprint", "MiningSession",
+    "edge_cardinalities",
     "fold_edges", "fold_edges_masked", "map_edges", "order_edges_by_hub",
     "pair_cardinality_fn", "plan_for", "resolve_plan", "session",
     "sum_edge_cardinalities", "triple_cardinality_ones", "wedge_triple_ones",

@@ -177,6 +177,54 @@ def wedge_triple_ones(sketch: SketchSet, u: jax.Array, v: jax.Array,
 
 
 # ----------------------------------------------------------------------------
+# answer footprints (the serving tier's invalidation unit)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Footprint:
+    """The vertex set one answer was computed from.
+
+    ProbGraph's fixed-size sketch rows make answer provenance *precise*: a
+    pair score reads exactly two sketch rows and two degrees, a membership
+    test one row, a local cluster the rows/degrees of its PPR support — so
+    ``vertices`` lists exactly the vertex ids whose adjacency, degree, or
+    sketch row the answer depends on. A result cached above the engine stays
+    valid until a delta touches (or a maintenance flush rebuilds) a footprint
+    vertex; ``vertices is None`` marks whole-graph answers (triangle counts
+    fold every edge) that no delta can survive.
+    """
+
+    vertices: Optional[np.ndarray]
+
+    @classmethod
+    def whole_graph(cls) -> "Footprint":
+        """Footprint of an answer that reads every edge (e.g. TC)."""
+        return cls(None)
+
+    @classmethod
+    def of(cls, *vertex_sets) -> "Footprint":
+        """Union footprint of the given vertex id arrays / scalars."""
+        arrs = [np.asarray(a, dtype=np.int64).reshape(-1)
+                for a in vertex_sets if a is not None]
+        arrs = [a for a in arrs if a.size]
+        if not arrs:
+            return cls(np.zeros(0, np.int64))
+        return cls(np.unique(np.concatenate(arrs)))
+
+    @property
+    def is_whole_graph(self) -> bool:
+        """True when the answer depends on the entire graph."""
+        return self.vertices is None
+
+    def intersects(self, vertices) -> bool:
+        """Does any of ``vertices`` invalidate this footprint?"""
+        if self.vertices is None:
+            return True
+        return bool(np.isin(np.asarray(vertices, dtype=np.int64),
+                            self.vertices).any())
+
+
+# ----------------------------------------------------------------------------
 # multi-query session
 # ----------------------------------------------------------------------------
 

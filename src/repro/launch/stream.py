@@ -96,6 +96,8 @@ def main():
     ap.add_argument("--tolerance", type=float, default=0.0,
                     help="error-budget rel_tolerance (0 = strict/bit-exact)")
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the serving-tier result cache")
     ap.add_argument("--verify", action="store_true",
                     help="check answers against a from-scratch static session")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -128,7 +130,11 @@ def main():
             DynamicGraph.from_edges(n, initial), kind=kind,
             storage_budget=args.budget,
             policy=ErrorBudgetPolicy(rel_tolerance=args.tolerance))
-    server = BatchedQueryServer(st)
+    # admission policy: the five per-batch queries below auto-flush on the
+    # fifth submit (max_batch) — no hand-rolled flush loop; max_wait_s keeps
+    # a straggler batch from waiting forever under other traffic shapes
+    server = BatchedQueryServer(st, max_batch=5, max_wait_s=0.25,
+                                cache=not args.no_cache)
     chunks = np.array_split(arrivals, args.batches)
     print(f"stream: n={n} initial_m={st.dyn.m} arrivals={arrivals.shape[0]} "
           f"batches={args.batches} kind={args.kind}")
@@ -149,15 +155,15 @@ def main():
         dt_delta = time.perf_counter() - t0
 
         qpairs = rng.integers(0, n, size=(args.queries, 2)).astype(np.int32)
+        t0 = time.perf_counter()
         server.submit_similarity(qpairs, "jaccard")
         server.submit_membership(int(rng.integers(0, n)),
                                  rng.integers(0, n, size=16))
         server.submit_link_prediction(int(rng.integers(0, n)), top_k=4)
         lc_seed = int(rng.integers(0, n))
         lc_rid = server.submit_local_cluster(lc_seed, alpha=0.15, eps=1e-3)
-        tc_rid = server.submit_triangle_count()
-        t0 = time.perf_counter()
-        answers = server.flush()
+        tc_rid = server.submit_triangle_count()  # 5th submit -> auto-flush
+        answers = server.flush()                 # already answered; drains
         dt_query = time.perf_counter() - t0
 
         lc = answers[lc_rid].value

@@ -15,6 +15,7 @@ accuracy bounds.
     rid = server.submit_similarity(pairs, "jaccard")
     answer = server.flush()[rid]          # .value, .latency_s, .staleness
 """
+from .cache import CacheEntry, ResultCache
 from .dynamic_graph import (DeltaResult, DeviceGraphState, DynamicGraph,
                             TrafficMeter)
 from .maintenance import STRICT_POLICY, ErrorBudgetPolicy, SketchMaintainer
@@ -22,6 +23,7 @@ from .server import BatchedQueryServer, QueryResult
 from .session import StreamSession, stream_session
 
 __all__ = [
+    "CacheEntry", "ResultCache",
     "DeltaResult", "DeviceGraphState", "DynamicGraph", "TrafficMeter",
     "ErrorBudgetPolicy", "SketchMaintainer", "STRICT_POLICY",
     "BatchedQueryServer", "QueryResult",

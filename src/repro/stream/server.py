@@ -1,13 +1,29 @@
-"""Batched query serving over a live StreamSession.
+"""Batched query serving over a live StreamSession, with a result cache.
 
 Requests (similarity / link-prediction / membership / triangle-count /
 local clustering) accumulate in a queue; ``flush()`` groups them, pads each
-group to fixed
-batch shapes (powers of two, so XLA recompiles stay bounded under arbitrary
-traffic), and answers everything through the engine seam — one
-``pair_cardinality_fn`` evaluation serves *all* pair-scored requests in a
-flush, whatever similarity measure each asked for, because every measure
+group to fixed batch shapes (powers of two, so XLA recompiles stay bounded
+under arbitrary traffic), and answers everything through the engine seam —
+one ``pair_cardinality_fn`` evaluation serves *all* pair-scored requests in
+a flush, whatever similarity measure each asked for, because every measure
 derives from |N_u ∩ N_v| + degrees (``similarity_from_cardinalities``).
+
+Three serving-tier layers ride on top of the batching:
+
+* **Result cache** (:class:`repro.stream.cache.ResultCache`, on by
+  default): answers are keyed by ``(kind, canonical args)`` and carry the
+  exact vertex :class:`~repro.engine.Footprint` they were computed from;
+  the session's delta feed (``touched ∪ rebuilt``) evicts precisely the
+  intersecting entries, so a hit is — under the strict error-budget
+  policy — bit-identical to recomputing on the live graph.
+* **Coalescing**: identical pending requests in one flush compute once and
+  fan out to every request id; duplicate local-cluster seeds in one
+  ``(alpha, eps)`` group collapse the same way (the canonical key *is* the
+  dedup unit).
+* **Admission policy**: optional ``max_batch`` (auto-flush when the queue
+  fills) and ``max_wait_s`` (``poll()`` flushes once the oldest pending
+  request has waited long enough), so callers submit-and-drain instead of
+  hand-rolling flush loops.
 
 Each response carries per-query latency (submit → answer wall time) and
 staleness (graph deltas applied between submit and answer) so a serving tier
@@ -18,14 +34,17 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional
+import weakref
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.algorithms.similarity import similarity_from_cardinalities
 from ..engine import engine as eng
+from ..engine.engine import Footprint
 from ..engine.plan import pow2_bucket
+from .cache import ResultCache
 from .session import StreamSession
 
 
@@ -50,71 +69,147 @@ class QueryResult:
 class _Pending:
     request_id: int
     kind: str          # similarity | linkpred | membership | tc | localcluster
+    key: Tuple         # canonical (kind, args…) — the cache/coalescing unit
     measure: str
-    pairs: Optional[np.ndarray]     # [P, 2] for pair-scored kinds
+    pairs: Optional[np.ndarray]     # [P, 2] for similarity requests
     payload: dict
     submitted_version: int
     t_submit: float
 
 
+def _freeze(value):
+    """Mark an answer's arrays read-only before caching (hits share them)."""
+    if isinstance(value, np.ndarray):
+        value.setflags(write=False)
+    elif isinstance(value, dict):
+        for item in value.values():
+            if isinstance(item, np.ndarray):
+                item.setflags(write=False)
+    return value
+
+
 class BatchedQueryServer:
-    """Accumulate-and-flush query server over one StreamSession."""
+    """Accumulate-and-flush query server over one StreamSession.
+
+    Args:
+      stream:         the live session to serve from.
+      min_batch:      pow2 padding floor shared by the pair, membership and
+                      local-cluster seed batches (one compiled program per
+                      size class, whatever the traffic).
+      stats_window:   bounded latency/staleness window size.
+      cache:          keep a footprint-invalidated result cache (default on;
+                      answers stay bit-identical — see ``stream.cache``).
+      cache_capacity: LRU entry bound for the cache.
+      max_batch:      auto-flush as soon as this many requests are pending
+                      (None = only explicit ``flush()``/``poll()``).
+      max_wait_s:     ``poll()`` flushes once the oldest pending request has
+                      waited this long (None = never due by age).
+    """
 
     def __init__(self, stream: StreamSession, min_batch: int = 64,
-                 stats_window: int = 65536):
+                 stats_window: int = 65536, cache: bool = True,
+                 cache_capacity: int = 4096,
+                 max_batch: Optional[int] = None,
+                 max_wait_s: Optional[float] = None):
         self.stream = stream
         self.min_batch = int(min_batch)
+        self.max_batch = None if max_batch is None else int(max_batch)
+        self.max_wait_s = None if max_wait_s is None else float(max_wait_s)
+        self.cache = ResultCache(cache_capacity) if cache else None
+        self._listener = None
+        if self.cache is not None:
+            # weakref-bound listener: a dropped server must not pin its
+            # cache via the session's listener list, nor keep charging
+            # every future delta for invalidating a dead cache — the
+            # closure self-unsubscribes once the cache is collected
+            cache_ref = weakref.ref(self.cache)
+            stream_ref = weakref.ref(stream)
+
+            def _invalidate(vertices):
+                target = cache_ref()
+                if target is None:
+                    sess = stream_ref()
+                    if sess is not None:
+                        sess.remove_delta_listener(_invalidate)
+                    return
+                target.invalidate(vertices)
+
+            self._listener = _invalidate
+            stream.add_delta_listener(_invalidate)
         self._queue: List[_Pending] = []
+        self._results: Dict[int, QueryResult] = {}
         self._next_id = 0
         self._served = 0
         self._flushes = 0
+        self._coalesced = 0
+        self._served_by_kind = collections.Counter()
         # bounded windows: a long-lived server must not grow per-query state
         self._latencies = collections.deque(maxlen=stats_window)
         self._staleness = collections.deque(maxlen=stats_window)
-        self._padded_rows = 0
-        self._real_rows = 0
+        # per-path (real, padded) row counters — membership and seed batches
+        # pad very differently from the shared pair pass, so they are not
+        # lumped into one overhead number
+        self._pad = {"pairs": [0, 0], "membership": [0, 0],
+                     "localcluster": [0, 0]}
+
+    def close(self) -> None:
+        """Detach from the session's invalidation feed and drop the cache.
+
+        Without the feed the cache can no longer be kept honest, so a
+        closed server recomputes every answer instead of risking stale
+        hits.
+        """
+        if self._listener is not None:
+            self.stream.remove_delta_listener(self._listener)
+            self._listener = None
+        self.cache = None
 
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
 
-    def _submit(self, kind: str, measure: str = "",
+    def _submit(self, kind: str, key: Tuple, measure: str = "",
                 pairs: Optional[np.ndarray] = None, **payload) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(_Pending(rid, kind, measure, pairs, payload,
+        self._queue.append(_Pending(rid, kind, key, measure, pairs, payload,
                                     self.stream.version, time.perf_counter()))
+        if self.max_batch is not None and len(self._queue) >= self.max_batch:
+            self._flush_queue()
         return rid
 
     def submit_similarity(self, pairs, measure: str = "jaccard") -> int:
         """Score vertex pairs [P, 2] under any cardinality-derived measure."""
-        return self._submit("similarity", measure,
-                            np.asarray(pairs, dtype=np.int32).reshape(-1, 2))
+        # copy, not view: the key snapshots the bytes here, and the flush
+        # computes from this array — a caller reusing its buffer must not
+        # be able to poison the cache with a key/value mismatch
+        pairs = np.array(pairs, dtype=np.int32, copy=True).reshape(-1, 2)
+        key = ("similarity", measure, pairs.shape[0], pairs.tobytes())
+        return self._submit("similarity", key, measure, pairs)
 
     def submit_link_prediction(self, u: int, top_k: int = 8,
                                measure: str = "common") -> int:
         """Top-k predicted partners for u among its distance-2 non-neighbors
-        of the *live* graph (Listing-5 candidates, served online)."""
-        dyn = self.stream.dyn
-        nbrs = dyn.neighbors(int(u))
-        cand = np.unique(np.concatenate(
-            [dyn.neighbors(int(x)) for x in nbrs]
-            or [np.zeros(0, np.int32)]))
-        cand = cand[(cand != u) & ~np.isin(cand, nbrs)]
-        pairs = np.stack([np.full(cand.shape[0], u, np.int32),
-                          cand.astype(np.int32)], axis=1)
-        return self._submit("linkpred", measure, pairs,
-                            u=int(u), top_k=int(top_k), candidates=cand)
+        (Listing-5 candidates, served online).
+
+        The candidate set is materialized from the live graph at *flush*
+        time, not here: with deltas interleaved between submit and flush, a
+        submit-time candidate set would mix stale candidates (e.g. a vertex
+        that became a neighbor still "predicted") with fresh scores.
+        """
+        key = ("linkpred", measure, int(u), int(top_k))
+        return self._submit("linkpred", key, measure,
+                            u=int(u), top_k=int(top_k))
 
     def submit_membership(self, u: int, candidates) -> int:
         """x ∈ N_u membership tests (BF answers straight from the sketch)."""
-        return self._submit("membership", "",
-                            u=int(u),
-                            candidates=np.asarray(candidates, dtype=np.int32))
+        cand = np.array(candidates, dtype=np.int32, copy=True)  # see above
+        key = ("membership", int(u), cand.shape[0], cand.tobytes())
+        return self._submit("membership", key, u=int(u), candidates=cand)
 
     def submit_triangle_count(self) -> int:
         """Triangle-count query over the live graph (shared engine pass)."""
-        return self._submit("tc")
+        return self._submit("tc", ("tc",))
 
     def submit_local_cluster(self, seed: int, alpha: float = 0.15,
                              eps: float = 1e-4) -> int:
@@ -123,11 +218,13 @@ class BatchedQueryServer:
         All localcluster requests sharing ``(alpha, eps)`` in one flush run
         as a single pow2-padded seed batch through the vmapped PPR push +
         sweep — the local-clustering analogue of the shared cardinality
-        pass. The answer value is a dict with ``members`` (int32[size]
-        vertex ids of the best cluster), ``conductance``, ``size`` and
-        ``support``.
+        pass. Duplicate seeds in a group dedup through the canonical key
+        and fan back out by request id. The answer value is a dict with
+        ``members`` (int32[size] vertex ids of the best cluster),
+        ``conductance``, ``size`` and ``support``.
         """
-        return self._submit("localcluster", "", seed=int(seed),
+        key = ("localcluster", int(seed), float(alpha), float(eps))
+        return self._submit("localcluster", key, seed=int(seed),
                             alpha=float(alpha), eps=float(eps))
 
     def pending_count(self) -> int:
@@ -139,23 +236,103 @@ class BatchedQueryServer:
     # ------------------------------------------------------------------
 
     def flush(self) -> Dict[int, QueryResult]:
-        """Answer every pending request in one padded batch per shape."""
+        """Answer everything pending; return (and clear) unclaimed results.
+
+        Results answered earlier by the admission policy (``max_batch`` /
+        ``poll()``) and not yet drained are included.
+        """
+        self._flush_queue()
+        return self.drain()
+
+    def poll(self) -> Dict[int, QueryResult]:
+        """Apply the admission policy, then drain.
+
+        Flushes when the queue holds ``max_batch`` requests or the oldest
+        pending request has waited ``max_wait_s``; either way returns every
+        answered-but-undrained result (possibly none).
+        """
+        if self._queue:
+            due_batch = (self.max_batch is not None
+                         and len(self._queue) >= self.max_batch)
+            due_age = (self.max_wait_s is not None
+                       and time.perf_counter() - self._queue[0].t_submit
+                       >= self.max_wait_s)
+            if due_batch or due_age:
+                self._flush_queue()
+        return self.drain()
+
+    def drain(self) -> Dict[int, QueryResult]:
+        """Return and clear every answered-but-unclaimed result."""
+        out, self._results = self._results, {}
+        return out
+
+    def _link_candidates(self, u: int) -> np.ndarray:
+        """Distance-2 non-neighbors of ``u`` on the *live* graph (sorted)."""
+        dyn = self.stream.dyn
+        nbrs = dyn.neighbors(int(u))
+        cand = np.unique(np.concatenate(
+            [dyn.neighbors(int(x)) for x in nbrs]
+            or [np.zeros(0, np.int32)]))
+        return cand[(cand != u) & ~np.isin(cand, nbrs)]
+
+    def _flush_queue(self) -> None:
+        """Answer every pending request: cache, coalesce, one batch per
+        shape class for the misses, then fan out by request id."""
         if not self._queue:
-            return {}
+            return
         queue, self._queue = self._queue, []
         self._flushes += 1
         sess = self.stream.session
+        dyn = self.stream.dyn
+        version = self.stream.version
+        vol_now = 2.0 * dyn.m
 
-        # one shared cardinality pass for ALL pair-scored requests
-        pair_reqs = [p for p in queue if p.pairs is not None]
-        scores: Dict[int, np.ndarray] = {}
-        if pair_reqs:
-            pairs = np.concatenate([p.pairs for p in pair_reqs], axis=0)
-            total = pairs.shape[0]
-            padded = np.zeros((pow2_bucket(total, self.min_batch), 2), np.int32)
+        # coalesce: identical requests (same canonical key) compute once
+        by_key: "collections.OrderedDict[Tuple, List[_Pending]]" = \
+            collections.OrderedDict()
+        for p in queue:
+            by_key.setdefault(p.key, []).append(p)
+        self._coalesced += len(queue) - len(by_key)
+
+        answers: Dict[Tuple, object] = {}
+        misses: List[Tuple] = []
+        for key in by_key:
+            if self.cache is not None:
+                hit = self.cache.get(
+                    key, vol_now if key[0] == "localcluster" else None)
+                if hit is not None:
+                    answers[key] = hit.value
+                    continue
+            misses.append(key)
+
+        # one shared cardinality pass for ALL uncached pair-scored requests;
+        # link-prediction candidates materialize HERE, from the live graph
+        pair_keys: List[Tuple] = []
+        pair_blocks: List[np.ndarray] = []
+        lp_cand: Dict[Tuple, np.ndarray] = {}
+        for key in misses:
+            p0 = by_key[key][0]
+            if p0.kind == "similarity":
+                pair_keys.append(key)
+                pair_blocks.append(p0.pairs)
+            elif p0.kind == "linkpred":
+                u = p0.payload["u"]
+                cand = self._link_candidates(u)
+                lp_cand[key] = cand
+                pair_keys.append(key)
+                pair_blocks.append(np.stack(
+                    [np.full(cand.shape[0], u, np.int32),
+                     cand.astype(np.int32)], axis=1))
+        scores: Dict[Tuple, np.ndarray] = {
+            key: np.zeros(0, np.float32) for key in pair_keys}
+        total = sum(b.shape[0] for b in pair_blocks)
+        if total:
+            pairs = np.concatenate(pair_blocks, axis=0)
+            padded = np.zeros((pow2_bucket(total, self.min_batch), 2),
+                              np.int32)
             padded[:total] = pairs
-            self._real_rows += total
-            self._padded_rows += padded.shape[0]
+            self._pad["pairs"][0] += total
+            self._pad["pairs"][1] += padded.shape[0]
             fn = eng.pair_cardinality_fn(sess.graph, sess.sketch, sess.plan)
             pairs_j = jnp.asarray(padded)
             cards_j = eng.map_edges(pairs_j, fn, sess.plan)
@@ -167,83 +344,130 @@ class BatchedQueryServer:
             cards = np.asarray(cards_j)
             du_all, dv_all = np.asarray(du_j), np.asarray(dv_j)
             off = 0
-            for p in pair_reqs:
-                k = p.pairs.shape[0]
-                scores[p.request_id] = np.asarray(similarity_from_cardinalities(
+            for key, block in zip(pair_keys, pair_blocks):
+                k = block.shape[0]
+                scores[key] = np.asarray(similarity_from_cardinalities(
                     jnp.asarray(cards[off:off + k]),
                     jnp.asarray(du_all[off:off + k]),
-                    jnp.asarray(dv_all[off:off + k]), p.measure))
+                    jnp.asarray(dv_all[off:off + k]), by_key[key][0].measure))
                 off += k
 
-        # one batched push + sweep per (alpha, eps) localcluster group
-        lc_reqs = [p for p in queue if p.kind == "localcluster"]
-        lc_answers: Dict[int, dict] = {}
-        for key in sorted({(p.payload["alpha"], p.payload["eps"])
-                           for p in lc_reqs}):
-            group = [p for p in lc_reqs
-                     if (p.payload["alpha"], p.payload["eps"]) == key]
-            seeds = np.array([p.payload["seed"] for p in group], np.int32)
-            # pad with a repeat of the first seed (dropped below); the pow2
-            # bucket keeps one compiled push/sweep per batch size class
-            padded = np.full(pow2_bucket(seeds.size), seeds[0], np.int32)
+        # one batched push + sweep per (alpha, eps) group of uncached seeds
+        # (seeds are unique per group by construction: the key dedups them)
+        lc_groups: "collections.OrderedDict[Tuple, List[Tuple]]" = \
+            collections.OrderedDict()
+        for key in misses:
+            if key[0] == "localcluster":
+                lc_groups.setdefault(key[2:], []).append(key)
+        deg_host = dyn.deg
+        for (alpha, eps), group in lc_groups.items():
+            seeds = np.array([key[1] for key in group], np.int32)
+            # pad with a repeat of the first seed (dropped below); the same
+            # pow2 floor as the pair path keeps one compiled push/sweep per
+            # batch size class
+            padded = np.full(pow2_bucket(seeds.size, self.min_batch),
+                             seeds[0], np.int32)
             padded[:seeds.size] = seeds
-            self._real_rows += seeds.size
-            self._padded_rows += padded.shape[0]
-            res = self.stream.local_cluster(padded, alpha=key[0], eps=key[1])
+            self._pad["localcluster"][0] += seeds.size
+            self._pad["localcluster"][1] += padded.shape[0]
+            res = self.stream.local_cluster(padded, alpha=alpha, eps=eps)
             sizes = np.asarray(res.best_size)
             phis = np.asarray(res.best_conductance)
             sup = np.asarray(res.support)
             order = np.asarray(res.order)
-            for i, p in enumerate(group):
-                lc_answers[p.request_id] = {
-                    "members": order[i, :sizes[i]],
+            for i, key in enumerate(group):
+                value = {
+                    # .copy(): a bare slice would pin the whole padded
+                    # [S, n] order matrix for as long as the answer lives
+                    "members": order[i, :sizes[i]].copy(),
                     "conductance": float(phis[i]),
                     "size": int(sizes[i]),
                     "support": int(sup[i]),
                 }
+                # frozen even with the cache off: coalesced duplicates
+                # share this object across request ids
+                answers[key] = _freeze(value)
+                if self.cache is not None:
+                    # conductance reads the total volume through
+                    # min(vol, 2m − vol): cache only clusters provably on
+                    # the small side, guarded against later volume drift
+                    swept = order[i, :sup[i]]
+                    swept = swept[swept < dyn.n]
+                    max2vol = 2.0 * float(deg_host[swept].sum())
+                    if self.cache.cacheable(max2vol, vol_now):
+                        fp = Footprint.of(res.footprint(i), key[1])
+                        self.cache.put(key, value, fp, version,
+                                       max2vol=max2vol, vol_total=vol_now)
 
-        out: Dict[int, QueryResult] = {}
-        for p in queue:
-            if p.kind == "similarity":
-                value = scores[p.request_id]
-            elif p.kind == "linkpred":
-                s = scores[p.request_id]
-                top = np.argsort(-s, kind="stable")[:p.payload["top_k"]]
-                value = {"candidates": p.payload["candidates"][top],
-                         "scores": s[top]}
-            elif p.kind == "membership":
-                cand = p.payload["candidates"]
+        # remaining miss kinds + cache fills
+        for key in misses:
+            kind = key[0]
+            if kind == "localcluster":
+                continue                       # answered in the group pass
+            p0 = by_key[key][0]
+            if kind == "similarity":
+                value = scores[key]
+                fp = Footprint.of(p0.pairs)
+            elif kind == "linkpred":
+                s = scores[key]
+                cand = lp_cand[key]
+                top = np.argsort(-s, kind="stable")[:p0.payload["top_k"]]
+                value = {"candidates": cand[top], "scores": s[top]}
+                # the candidate set itself is a function of N(u)'s rows: a
+                # new edge at any neighbor mints a new candidate, so the
+                # footprint is {u} ∪ N(u) ∪ candidates
+                u = p0.payload["u"]
+                fp = Footprint.of(u, dyn.neighbors(u), cand)
+            elif kind == "membership":
+                cand = p0.payload["candidates"]
                 padded = np.full(pow2_bucket(cand.shape[0], self.min_batch),
-                                 self.stream.dyn.n, np.int32)
+                                 dyn.n, np.int32)
                 padded[:cand.shape[0]] = cand
-                self._real_rows += cand.shape[0]
-                self._padded_rows += padded.shape[0]
+                self._pad["membership"][0] += cand.shape[0]
+                self._pad["membership"][1] += padded.shape[0]
                 value = np.asarray(self.stream.membership(
-                    p.payload["u"], padded))[:cand.shape[0]]
-            elif p.kind == "tc":
+                    p0.payload["u"], padded))[:cand.shape[0]]
+                fp = Footprint.of(p0.payload["u"])
+            elif kind == "tc":
                 value = float(sess.triangle_count())
-            elif p.kind == "localcluster":
-                value = lc_answers[p.request_id]
+                fp = Footprint.whole_graph()
             else:  # pragma: no cover - guarded at submit time
-                raise ValueError(p.kind)
+                raise ValueError(kind)
+            # frozen unconditionally: coalesced duplicates (and later cache
+            # hits) all share this object — nobody gets to mutate it
+            answers[key] = _freeze(value)
+            if self.cache is not None:
+                self.cache.put(key, value, fp, version)
+
+        # fan out: every request id gets its key's (shared) answer
+        for p in queue:
             lat = time.perf_counter() - p.t_submit
-            res = QueryResult(p.request_id, p.kind, value,
-                              p.submitted_version, self.stream.version, lat)
+            res = QueryResult(p.request_id, p.kind, answers[p.key],
+                              p.submitted_version, version, lat)
             self._latencies.append(lat)
             self._staleness.append(res.staleness)
             self._served += 1
-            out[p.request_id] = res
-        return out
+            self._served_by_kind[p.kind] += 1
+            self._results[p.request_id] = res
 
     def stats(self) -> dict:
-        """Serving counters: latency percentiles, staleness, pad overhead."""
-        lat = np.asarray(self._latencies or [0.0])
-        return {
+        """Serving counters: per-kind served/pad numbers, latency
+        percentiles (only once something was served), coalescing and cache
+        effectiveness."""
+        out = {
             "served": self._served,
             "flushes": self._flushes,
-            "latency_mean_s": float(lat.mean()),
-            "latency_p95_s": float(np.percentile(lat, 95)),
-            "staleness_mean": float(np.mean(self._staleness or [0])),
-            "pad_overhead": (self._padded_rows / self._real_rows - 1.0
-                             if self._real_rows else 0.0),
+            "coalesced": self._coalesced,
+            "by_kind": dict(self._served_by_kind),
+            "pad_overhead": {
+                name: (padded / real - 1.0 if real else 0.0)
+                for name, (real, padded) in self._pad.items()},
         }
+        if self._served:
+            lat = np.asarray(self._latencies)
+            out["latency_mean_s"] = float(lat.mean())
+            out["latency_p95_s"] = float(np.percentile(lat, 95))
+            out["staleness_mean"] = float(np.mean(self._staleness))
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out

@@ -61,6 +61,7 @@ class StreamSession:
         self.cards_recomputed = 0
         self.cards_carried = 0
         self.extra = {}            # restore() fills this from the checkpoint
+        self._delta_listeners = []  # serving-tier invalidation subscribers
 
     # ------------------------------------------------------------------
     # mutation
@@ -75,6 +76,30 @@ class StreamSession:
     def sketch(self) -> Optional[SketchSet]:
         """The maintained sketch, or None in exact mode."""
         return self.maintainer.sketch if self.maintainer else None
+
+    def add_delta_listener(self, fn) -> None:
+        """Subscribe ``fn(vertices)`` to the invalidation feed.
+
+        After every delta (and every maintenance :meth:`flush` that rebuilt
+        rows) each listener is called with the sorted int64 vertex set whose
+        adjacency, degree, or sketch row changed — ``touched ∪ rebuilt``.
+        This is exactly the set a serving-tier result cache must evict
+        footprint-intersecting entries for; nothing else can have changed
+        any answer.
+        """
+        self._delta_listeners.append(fn)
+
+    def remove_delta_listener(self, fn) -> None:
+        """Unsubscribe a listener previously added (no-op if absent)."""
+        if fn in self._delta_listeners:
+            self._delta_listeners.remove(fn)
+
+    def _publish_invalid(self, vertices: np.ndarray) -> None:
+        """Push one delta's changed-vertex set to every listener (a copy of
+        the list: a listener may unsubscribe itself mid-publish)."""
+        if vertices.size:
+            for fn in list(self._delta_listeners):
+                fn(vertices)
 
     def _device_carry(self, carry_host: Optional[np.ndarray],
                       identity: bool) -> Optional[DeviceCarry]:
@@ -126,6 +151,7 @@ class StreamSession:
             car = 0 if recomputed is None else max(graph.m - recomputed, 0)
             self.cards_recomputed += rec
             self.cards_carried += car
+            self._publish_invalid(invalid)
         return {
             "version": self.version,
             "inserted": int(delta.inserted.shape[0]),
@@ -152,6 +178,9 @@ class StreamSession:
                 identity=True)             # edge set unchanged by a flush
             self.session.refresh(self.dyn.view(), self.maintainer.sketch,
                                  carry)
+            # a rebuild replaces stale sketch rows: cached answers reading
+            # those rows are now wrong, exactly like a delta touching them
+            self._publish_invalid(np.asarray(rebuilt, dtype=np.int64))
         return int(rebuilt.size)
 
     # ------------------------------------------------------------------

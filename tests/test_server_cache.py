@@ -1,0 +1,344 @@
+"""Serving-tier result cache: bit-identical hits across randomized
+delta/query interleavings (all sketch kinds + exact), delta-precise
+footprint eviction, request coalescing, the flush-time link-prediction
+candidate fix, per-kind server stats, and the admission/auto-flush policy."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.engine import Footprint
+from repro.stream import (BatchedQueryServer, ErrorBudgetPolicy,
+                          stream_session)
+
+KINDS = ("bf", "kh", "1h", "kmv", None)
+SKETCH_KW = dict(words=4, k=6, num_hashes=2, seed=3)
+
+
+def _kw(kind):
+    return dict(SKETCH_KW, policy=ErrorBudgetPolicy(0.0)) if kind else {}
+
+
+def _assert_value_equal(a, b, msg=""):
+    if isinstance(a, dict):
+        assert set(a) == set(b), msg
+        for k in a:
+            _assert_value_equal(a[k], b[k], f"{msg}[{k}]")
+    elif isinstance(a, np.ndarray):
+        np.testing.assert_array_equal(a, np.asarray(b), msg)
+    else:
+        assert a == b, msg
+
+
+def _pair_graph():
+    """A small fixed graph whose footprints are known exactly."""
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 4], [4, 5], [5, 6],
+                      [6, 0], [10, 11], [11, 12], [12, 13], [2, 14]])
+    return G.from_edge_array(20, edges)
+
+
+# ---------------------------------------------------------------------------
+# footprint metadata
+# ---------------------------------------------------------------------------
+
+def test_footprint_of_union_and_intersection():
+    fp = Footprint.of(np.array([[3, 1], [7, 3]]), 9, None)
+    np.testing.assert_array_equal(fp.vertices, [1, 3, 7, 9])
+    assert fp.intersects([7]) and not fp.intersects([2, 8])
+    assert not fp.is_whole_graph
+    whole = Footprint.whole_graph()
+    assert whole.is_whole_graph and whole.intersects([0])
+    assert not Footprint.of().intersects([0])
+
+
+def test_localcluster_result_carries_residual_footprint():
+    g = G.kronecker(7, 6, seed=2)
+    st = stream_session(g, "bf", storage_budget=0.5)
+    res = st.local_cluster(np.array([5], np.int32), alpha=0.15, eps=1e-2)
+    fp = res.footprint(0)
+    assert fp.size >= 1 and 5 in fp              # the seed always holds mass
+    p = np.asarray(res.ppr[0])
+    r = np.asarray(res.residual[0])
+    np.testing.assert_array_equal(fp, np.nonzero((p > 0) | (r > 0))[0])
+
+
+# ---------------------------------------------------------------------------
+# property: cache-hit answers ≡ cache-off answers under interleaved deltas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_cached_answers_bit_identical_across_interleavings(kind):
+    """Randomized delta/query interleavings: every answer from the cached
+    server (second submission of a key is a guaranteed hit when no delta
+    intervened; earlier rounds exercise eviction) equals the cache-off
+    server's answer, bit for bit, for every sketch kind and exact."""
+    rng = np.random.default_rng(11 if kind is None else hash(kind) % 997)
+    g = G.erdos_renyi(72, 0.08, seed=5)
+    st = stream_session(g, kind, **_kw(kind))
+    cached = BatchedQueryServer(st, min_batch=8)
+    plain = BatchedQueryServer(st, min_batch=8, cache=False)
+
+    population = (
+        [("sim", rng.integers(0, g.n, size=(4, 2)).astype(np.int32),
+          m) for m in ("jaccard", "common", "overlap")]
+        + [("mem", int(rng.integers(0, g.n)),
+            rng.integers(0, g.n, size=8).astype(np.int32)) for _ in range(2)]
+        + [("lp", int(rng.integers(0, g.n))) for _ in range(2)]
+        + [("lc", int(rng.integers(0, g.n))) for _ in range(2)]
+        + [("tc",)])
+
+    def submit(server, item):
+        if item[0] == "sim":
+            return server.submit_similarity(item[1], item[2])
+        if item[0] == "mem":
+            return server.submit_membership(item[1], item[2])
+        if item[0] == "lp":
+            return server.submit_link_prediction(item[1], top_k=5)
+        if item[0] == "lc":
+            return server.submit_local_cluster(item[1], 0.15, 1e-2)
+        return server.submit_triangle_count()
+
+    for _ in range(3):
+        ins = rng.integers(0, g.n, size=(int(rng.integers(2, 10)), 2))
+        cur = st.dyn.edge_array()
+        dels = cur[rng.choice(cur.shape[0], size=3, replace=False)]
+        st.apply_delta(ins, dels)
+        # two flushes per round: the second submission of every key is a
+        # guaranteed cache hit (no delta in between)
+        for _ in range(2):
+            sample = [population[i] for i in
+                      rng.choice(len(population), size=6)]
+            rids = [(submit(cached, it), submit(plain, it)) for it in sample]
+            out_c, out_p = cached.flush(), plain.flush()
+            for (rc, rp), it in zip(rids, sample):
+                _assert_value_equal(out_c[rc].value, out_p[rp].value,
+                                    f"{kind}:{it[0]}")
+    assert cached.cache.hits > 0
+    assert plain.cache is None
+
+
+# ---------------------------------------------------------------------------
+# delta-precise eviction (the footprint invariant, via stats counters)
+# ---------------------------------------------------------------------------
+
+def test_delta_evicts_exactly_footprint_intersecting_entries():
+    st = stream_session(_pair_graph(), "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8)
+    srv.submit_similarity(np.array([[0, 1]]), "jaccard")    # fp {0, 1}
+    srv.submit_similarity(np.array([[3, 4]]), "jaccard")    # fp {3, 4}
+    srv.submit_membership(5, np.array([10, 11]))            # fp {5}
+    srv.submit_triangle_count()                             # whole graph
+    srv.flush()
+    assert len(srv.cache) == 4 and srv.cache.inserts == 4
+
+    st.apply_delta([[0, 10]])          # touches exactly {0, 10}
+    # evicted: sim(0,1) (footprint hit) + tc (whole graph); nothing else
+    assert srv.cache.evicted_footprint == 1
+    assert srv.cache.evicted_whole == 1
+    assert len(srv.cache) == 2
+
+    # survivors serve as hits and still equal a live recomputation
+    r34 = srv.submit_similarity(np.array([[3, 4]]), "jaccard")
+    rm = srv.submit_membership(5, np.array([10, 11]))
+    out = srv.flush()
+    assert srv.cache.hits == 2
+    np.testing.assert_array_equal(
+        out[r34].value, np.asarray(st.similarity(np.array([[3, 4]]),
+                                                 "jaccard")))
+    np.testing.assert_array_equal(
+        out[rm].value, np.asarray(st.membership(5, np.array([10, 11]))))
+
+
+def test_lazy_policy_flush_rebuild_evicts_dependent_entries():
+    """A deferred-rebuild flush changes sketch rows without a delta: the
+    session must publish the rebuilt set so dependent entries die too."""
+    g = G.erdos_renyi(60, 0.12, seed=7)
+    st = stream_session(g, "bf", policy=ErrorBudgetPolicy(rel_tolerance=50.0),
+                        **SKETCH_KW)
+    srv = BatchedQueryServer(st, min_batch=8)
+    edge = st.dyn.edge_array()[0]
+    st.apply_delta(None, [edge])                 # rows go dirty, deferred
+    a = int(edge[0])
+    rid = srv.submit_membership(a, np.arange(8))
+    stale_val = srv.flush()[rid].value           # cached against stale row
+    assert ("membership", a, 8, np.arange(8, dtype=np.int32).tobytes()) \
+        in srv.cache
+    before = srv.cache.evicted_footprint
+    rebuilt = st.flush()                         # rebuild replaces row a
+    assert rebuilt > 0
+    assert srv.cache.evicted_footprint > before
+    rid2 = srv.submit_membership(a, np.arange(8))
+    fresh = srv.flush()[rid2].value              # recomputed, not served stale
+    np.testing.assert_array_equal(
+        fresh, np.asarray(st.membership(a, np.arange(8))))
+    assert stale_val is not fresh
+
+
+def test_capacity_eviction_cleans_the_vertex_index():
+    """LRU eviction must unindex the dead key: a leaked index entry would
+    re-count phantom evictions and kill re-inserted keys via footprints
+    they no longer have."""
+    from repro.stream import ResultCache
+    c = ResultCache(capacity=2)
+    c.put(("a",), 1, Footprint.of(1), 0)
+    c.put(("b",), 2, Footprint.of(2), 0)
+    c.put(("c",), 3, Footprint.of(3), 0)          # LRU-evicts ("a",)
+    assert c.evicted_capacity == 1 and len(c) == 2
+    assert c.invalidate([1]) == 0                 # dead key: not re-counted
+    assert c.evicted_footprint == 0
+    c.put(("a",), 4, Footprint.of(7), 1)          # back, different footprint
+    c.invalidate([1])                             # old footprint: must miss
+    assert ("a",) in c and c.evicted_footprint == 0
+    c.invalidate([7])
+    assert ("a",) not in c and c.evicted_footprint == 1
+
+
+def test_dropped_server_unsubscribes_from_delta_feed():
+    import gc
+    st = stream_session(G.erdos_renyi(60, 0.1, seed=2), "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8)
+    assert len(st._delta_listeners) == 1
+    del srv
+    gc.collect()
+    st.apply_delta([[0, 1], [2, 3]])          # publish prunes the dead ref
+    assert len(st._delta_listeners) == 0
+    # close() detaches an alive server immediately AND drops its cache —
+    # without the feed, cached entries could silently go stale
+    srv2 = BatchedQueryServer(st, min_batch=8)
+    srv2.close()
+    assert len(st._delta_listeners) == 0 and srv2.cache is None
+    rid = srv2.submit_triangle_count()            # still serves, uncached
+    assert rid in srv2.flush()
+
+
+def test_oversized_localcluster_is_not_cached():
+    # eps 1e-4 on a small dense graph sweeps more than half the volume: the
+    # conductance then reads min(vol, 2m - vol) on the far side, which any
+    # delta shifts — such answers are not cacheable and must recompute
+    g = G.erdos_renyi(50, 0.15, seed=3)
+    st = stream_session(g, "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8)
+    rid = srv.submit_local_cluster(7, alpha=0.15, eps=1e-4)
+    out = srv.flush()
+    key = ("localcluster", 7, 0.15, 1e-4)
+    if key in srv.cache:          # cacheable only if the cluster stayed small
+        entry = srv.cache.get(key, 2.0 * st.dyn.m)
+        assert entry.max2vol <= entry.vol_total
+    else:
+        rid2 = srv.submit_local_cluster(7, alpha=0.15, eps=1e-4)
+        out2 = srv.flush()
+        _assert_value_equal(out2[rid2].value, out[rid].value)
+
+
+# ---------------------------------------------------------------------------
+# coalescing: identical requests compute once, fan out per request id
+# ---------------------------------------------------------------------------
+
+def test_identical_requests_coalesce_in_one_flush():
+    g = G.erdos_renyi(60, 0.1, seed=2)
+    st = stream_session(g, "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8)
+    pairs = np.array([[1, 2], [3, 4], [5, 6]], np.int32)
+    ra = srv.submit_similarity(pairs, "jaccard")
+    rb = srv.submit_similarity(pairs, "jaccard")
+    rc1 = srv.submit_local_cluster(7, 0.15, 1e-2)
+    rc2 = srv.submit_local_cluster(7, 0.15, 1e-2)
+    rc3 = srv.submit_local_cluster(9, 0.15, 1e-2)
+    out = srv.flush()
+    stats = srv.stats()
+    assert stats["coalesced"] == 2               # one sim + one lc duplicate
+    # the shared pair pass saw the pairs block once, the seed batch two
+    # unique seeds — duplicates dedup *before* padding
+    assert srv._pad["pairs"][0] == 3
+    assert srv._pad["localcluster"][0] == 2
+    assert out[ra].value is out[rb].value        # fanned out, one compute
+    _assert_value_equal(out[rc1].value, out[rc2].value)
+    assert out[rc3].value["size"] >= 0
+    assert srv.cache.inserts <= 4                # one entry per unique key
+
+
+# ---------------------------------------------------------------------------
+# link prediction: candidates materialize at flush, not submit
+# ---------------------------------------------------------------------------
+
+def test_linkpred_candidates_reflect_deltas_between_submit_and_flush():
+    # path graph: N(0) = {1, 3}; distance-2 candidates of 0 are {2, 4}
+    edges = np.array([[0, 1], [1, 2], [0, 3], [3, 4]])
+    st = stream_session(G.from_edge_array(8, edges), "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8)
+    rid = srv.submit_link_prediction(0, top_k=4)
+    # interleaved delta: 2 becomes a neighbor of 0 (no longer a candidate),
+    # 5 attaches to neighbor 1 (a brand-new candidate)
+    st.apply_delta([[0, 2], [5, 1]])
+    res = srv.flush()[rid]
+    got = set(int(c) for c in res.value["candidates"])
+    assert 2 not in got and 5 in got and 4 in got
+    assert res.staleness == 1
+    # bit-identical to a fresh cache-off submission at the same version
+    ref_srv = BatchedQueryServer(st, min_batch=8, cache=False)
+    ref_rid = ref_srv.submit_link_prediction(0, top_k=4)
+    ref = ref_srv.flush()[ref_rid]
+    _assert_value_equal(res.value, ref.value)
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-kind stats, no seeded percentiles
+# ---------------------------------------------------------------------------
+
+def test_stats_omit_percentiles_until_served_and_split_pads():
+    st = stream_session(G.erdos_renyi(60, 0.1, seed=2), "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8)
+    stats = srv.stats()
+    assert stats["served"] == 0
+    assert "latency_p95_s" not in stats and "latency_mean_s" not in stats
+    assert "staleness_mean" not in stats
+    assert set(stats["pad_overhead"]) == {"pairs", "membership",
+                                          "localcluster"}
+    assert stats["pad_overhead"]["pairs"] == 0.0
+
+    srv.submit_similarity(np.array([[1, 2]] * 3), "jaccard")
+    srv.submit_membership(4, np.arange(5))
+    srv.submit_local_cluster(3, 0.15, 1e-2)
+    srv.flush()
+    stats = srv.stats()
+    assert stats["served"] == 3
+    assert stats["by_kind"] == {"similarity": 1, "membership": 1,
+                                "localcluster": 1}
+    assert stats["latency_p95_s"] > 0.0
+    # per-path padding: 3 pair rows -> 8-bucket, 5 membership rows ->
+    # 8-bucket, 1 seed -> 8-bucket; nothing lumped together
+    assert stats["pad_overhead"]["pairs"] == pytest.approx(8 / 3 - 1)
+    assert stats["pad_overhead"]["membership"] == pytest.approx(8 / 5 - 1)
+    assert stats["pad_overhead"]["localcluster"] == pytest.approx(8 / 1 - 1)
+    assert stats["cache"]["inserts"] == 3
+
+
+# ---------------------------------------------------------------------------
+# admission policy: max_batch auto-flush + max_wait_s poll
+# ---------------------------------------------------------------------------
+
+def test_max_batch_auto_flushes_on_admission():
+    st = stream_session(G.erdos_renyi(60, 0.1, seed=2), "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8, max_batch=2)
+    r1 = srv.submit_triangle_count()
+    assert srv.pending_count() == 1
+    r2 = srv.submit_membership(3, np.arange(4))   # hits max_batch: flushes
+    assert srv.pending_count() == 0
+    out = srv.drain()
+    assert set(out) == {r1, r2}
+    assert srv.flush() == {}                      # nothing left undelivered
+
+
+def test_poll_flushes_after_max_wait():
+    st = stream_session(G.erdos_renyi(60, 0.1, seed=2), "bf", **_kw("bf"))
+    srv = BatchedQueryServer(st, min_batch=8, max_wait_s=0.01)
+    rid = srv.submit_triangle_count()
+    assert srv.poll() == {} or srv.pending_count() == 0   # may not be due yet
+    time.sleep(0.02)
+    out = srv.poll()
+    assert rid in out and srv.pending_count() == 0
+    # without pressure nothing flushes early
+    srv2 = BatchedQueryServer(st, min_batch=8, max_wait_s=30.0, max_batch=99)
+    srv2.submit_triangle_count()
+    assert srv2.poll() == {} and srv2.pending_count() == 1
