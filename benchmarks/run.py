@@ -27,9 +27,11 @@ def main() -> None:
 
     from . import (accuracy_pairs, adaptive_bloom, algo_speedup, construction,
                    engine_bench, heuristics, kernels_bench, localcluster,
-                   roofline, scaling, serving, stream_bench, tc_estimators)
+                   roofline, scaling, serving, setexpr_bench, stream_bench,
+                   tc_estimators)
     suites = [
         ("kernels", kernels_bench.run),
+        ("setexpr", setexpr_bench.run),
         ("engine", engine_bench.run),
         ("stream", stream_bench.run),
         ("localcluster", localcluster.run),
@@ -43,7 +45,7 @@ def main() -> None:
         ("adaptive_bloom", adaptive_bloom.run),
         ("roofline", roofline.run),
     ]
-    smoke_suites = {"kernels", "engine", "stream", "localcluster"}
+    smoke_suites = {"kernels", "setexpr", "engine", "stream", "localcluster"}
     if args.only is not None:
         suites = [s for s in suites if s[0] == args.only]
         if not suites:

@@ -9,6 +9,7 @@ from .sketches import SketchSet, build
 from .intersect import make_pair_cardinality_fn
 from .algorithms import (
     triangle_count,
+    five_clique_count,
     four_clique_count,
     jarvis_patrick,
     pair_similarity,
@@ -18,7 +19,7 @@ from .algorithms import (
 __all__ = [
     "Graph", "from_edge_array", "erdos_renyi", "kronecker", "barabasi_albert",
     "SketchSet", "build", "make_pair_cardinality_fn",
-    "triangle_count", "four_clique_count", "jarvis_patrick",
+    "triangle_count", "five_clique_count", "four_clique_count", "jarvis_patrick",
     "pair_similarity", "link_prediction_effectiveness",
     "bounds", "estimators", "exact", "graph", "hashing", "intersect", "sketches",
 ]

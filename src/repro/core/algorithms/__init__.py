@@ -1,5 +1,5 @@
 from .tc import triangle_count
-from .cliques import four_clique_count
+from .cliques import five_clique_count, four_clique_count
 from .clustering import jarvis_patrick
 from .localcluster import LocalClusterResult, local_cluster, ppr_push, sweep_cut
 from .similarity import pair_similarity
@@ -7,6 +7,7 @@ from .linkpred import link_prediction_effectiveness
 
 __all__ = [
     "triangle_count",
+    "five_clique_count",
     "four_clique_count",
     "jarvis_patrick",
     "LocalClusterResult",

@@ -247,8 +247,9 @@ def _prefix_intersections(deg: jax.Array, adj: jax.Array, n: int,
 
     Sketch path (kind == "bf"): exclusive prefix-OR of single-vertex Bloom
     rows gives ``B(S_{j-1})``; one AND+popcount against the neighborhood row
-    ``B(N(order_j))`` per step (through the Pallas pair kernel when
-    ``plan.use_kernel``). Exact path: gather each swept vertex's padded
+    ``B(N(order_j))`` per step, through the compiled 2-way AND set
+    expression in dense form (fused Pallas pass when ``plan.use_kernel``,
+    jnp otherwise). Exact path: gather each swept vertex's padded
     adjacency row and count neighbors whose sweep rank is smaller.
     """
     s_batch, k = order.shape
@@ -268,14 +269,13 @@ def _prefix_intersections(deg: jax.Array, adj: jax.Array, n: int,
         # the union size needs estimating. Unlike the AND form this stays
         # accurate while the prefix filter fills up: it saturates with the
         # union's fill fraction, which core.bounds.sweep_cut_rmse models.
-        if plan.use_kernel:
-            from repro.kernels import ops as kops
-            ones_and = kops.bf_intersect_pairs(
-                nbr_rows.reshape(-1, words), prefix.reshape(-1, words),
-                block_w=plan.block_w).reshape(s_batch, k)
-        else:
-            ones_and = jnp.sum(jax.lax.population_count(nbr_rows & prefix),
-                               axis=-1).astype(jnp.int32)
+        from ...engine import setexpr
+        u_row, v_row = setexpr.rows(2)
+        ce = setexpr.compile_expr(u_row & v_row, block_w=plan.block_w,
+                                  use_kernel=plan.use_kernel)
+        ones_and = ce.ones_rows(
+            nbr_rows.reshape(-1, words),
+            prefix.reshape(-1, words)).reshape(s_batch, k)
         ones_nbr = jnp.sum(jax.lax.population_count(nbr_rows), axis=-1)
         ones_pre = jnp.sum(jax.lax.population_count(prefix), axis=-1)
         ones_or = ones_nbr + ones_pre - ones_and

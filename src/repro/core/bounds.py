@@ -27,6 +27,33 @@ def bf_and_mse_bound(inter_size: float, total_bits: int, num_hashes: int) -> flo
     return float(_bf_and_mse(inter_size, total_bits, num_hashes))
 
 
+def bf_kway_and_mse_bound(inter_size: float, total_bits: int,
+                          num_hashes: int, k: int = 2) -> float:
+    """MSE bound for the *direct* k-way AND estimator |X_1∩…∩X_k|_AND.
+
+    The Swamidass map applied to popcount(B_1 AND … AND B_k) sees exactly
+    one derived Bloom row whose true-bit process is governed by the k-way
+    intersection size, so Prop IV.1's MSE expression carries over with
+    ``inter_size`` the k-way intersection (the AND row's ones are
+    stochastically *closer* to the true-bits-only row as k grows — each
+    extra AND strips false-positive bits that survive the pairwise case —
+    so this is conservative for k > 2). Validity mirrors the pairwise
+    bound: b = o(sqrt(B)) and b·|∩| <= 0.499·B·log(B).
+
+    This is why ``repro.engine.setexpr`` lowers k-way queries (e.g. the
+    5-clique 4-way AND) to a *single* fused AND expression instead of
+    inclusion–exclusion over the 2^k − 1 pairwise/union terms: the direct
+    estimator needs one popcount with one MSE of this form, while the
+    inclusion–exclusion expansion sums 2^k − 1 estimates whose errors add
+    (in the best, independent case) and whose alternating signs lose the
+    intersection's monotonicity — the kH 3-way path in
+    ``core.algorithms.cliques`` shows the degradation in practice.
+    """
+    if k < 2:
+        raise ValueError(f"k-way AND needs k >= 2, got {k}")
+    return float(_bf_and_mse(inter_size, total_bits, num_hashes))
+
+
 def bf_and_deviation_bound(inter_size: float, total_bits: int, num_hashes: int,
                            t: float) -> float:
     """Eq. 3: Chebyshev-on-MSE tail bound P(|est−truth| ≥ t)."""

@@ -23,9 +23,11 @@ CardFn = Callable[[jax.Array], jax.Array]
 
 
 def make_pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet] = None,
-                             use_kernel: bool = False, variant: str = "union",
+                             *, use_kernel: bool = False,
+                             variant: str = "union",
                              estimator: Optional[str] = None,
                              block_e: int = 8, block_w: int = 512) -> CardFn:
+    """Build the batched pairs[P, 2] -> float32[P] cardinality provider."""
     if sketch is None:
         def exact_fn(pairs: jax.Array) -> jax.Array:
             return exact_pair_cardinalities(graph, pairs).astype(jnp.float32)
@@ -35,30 +37,32 @@ def make_pair_cardinality_fn(graph: Graph, sketch: Optional[SketchSet] = None,
     deg = graph.deg
 
     if sketch.kind == "bf":
+        # Both dispatch paths (fused Pallas pass / jnp gather) are lowerings
+        # of the same compiled set expression, so their integer popcounts —
+        # and therefore the float estimates — are bit-identical. The lazy
+        # import keeps the core -> engine edge out of module load order.
+        from ..engine import setexpr
+
         data = sketch.data
         b = sketch.num_hashes
         total_bits = data.shape[1] * 32
-        if use_kernel:
-            from repro.kernels import ops as kops
-
-            def bf_kernel_fn(pairs: jax.Array) -> jax.Array:
-                ones = kops.bf_edge_intersect(data, pairs, block_e=block_e,
-                                              block_w=block_w)
-                if kind == "bf_l":
-                    return ones.astype(jnp.float32) / b
-                return est.bf_intersection_and_from_ones(ones, total_bits, b)
-            return bf_kernel_fn
+        u_row, v_row = setexpr.rows(2)
+        expr = (u_row | v_row) if kind == "bf_or" else (u_row & v_row)
+        ce = setexpr.compile_expr(expr, block_e=block_e, block_w=block_w,
+                                  use_kernel=use_kernel)
 
         def bf_fn(pairs: jax.Array) -> jax.Array:
-            ru = jnp.take(data, pairs[:, 0], axis=0)
-            rv = jnp.take(data, pairs[:, 1], axis=0)
+            """Per-pair BF estimate from the compiled expression's ones."""
+            ones = ce.ones(data, pairs)
             if kind == "bf_l":
-                return est.bf_intersection_limit(ru, rv, b)
+                return ones.astype(jnp.float32) / b
             if kind == "bf_or":
-                du = jnp.take(deg, pairs[:, 0])
-                dv = jnp.take(deg, pairs[:, 1])
-                return est.bf_intersection_or(ru, rv, b, du, dv)
-            return est.bf_intersection_and(ru, rv, b)
+                du = jnp.take(deg, pairs[:, 0]).astype(jnp.float32)
+                dv = jnp.take(deg, pairs[:, 1]).astype(jnp.float32)
+                union_est = est.bf_intersection_and_from_ones(
+                    ones, total_bits, b)
+                return du + dv - union_est
+            return est.bf_intersection_and_from_ones(ones, total_bits, b)
         return bf_fn
 
     if sketch.kind == "kh":

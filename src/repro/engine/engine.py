@@ -8,8 +8,10 @@ Responsibilities (SISA's set-centric batching + GBBS's shared primitives):
   * ``edge_cardinalities`` / ``sum_edge_cardinalities`` — chunked per-edge
     map / fold over an edge list with degree-ordered layout and optional
     shard_map over the edge axis (repro.distributed.sharding rules).
-  * ``triple_cardinality_ones`` — the 3-way popcount provider for 4-clique
-    triple intersections (block-gather kernel or jnp gather).
+  * ``tuple_cardinality_ones`` / ``triple_cardinality_ones`` — the k-way
+    popcount provider over row-index tuples, compiled from the k-way AND
+    set expression (``repro.engine.setexpr``) to one fused block-gather
+    pass or the equivalent jnp gather (bit-identical popcounts).
   * ``session`` — multi-query amortization: build the sketch once, run
     TC + LCC + clustering + 4-clique over the shared sketch and the shared
     per-edge cardinality pass.
@@ -28,6 +30,7 @@ from ..core.graph import Graph
 from ..core.intersect import CardFn, make_pair_cardinality_fn
 from ..core.sketches import SketchSet, build as build_sketch
 from ..distributed import sharding
+from . import setexpr
 from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
                    order_edges_by_hub, plan_for, pow2_bucket)
 
@@ -130,26 +133,33 @@ def _sharded_fold(edges: jax.Array, chunk_fn, plan: EnginePlan) -> jax.Array:
     return fold_shard(edges_p, mask)
 
 
+def tuple_cardinality_ones(sketch: SketchSet, tuples: jax.Array,
+                           plan: EnginePlan) -> jax.Array:
+    """popcnt(AND of the k referenced rows) per tuple — int32[T].
+
+    The plan-dispatched face of the set-expression compiler for the common
+    k-way AND: ``tuples`` is int32[T, k] and the cached compiled expression
+    lowers to one fused block-gather pass (``plan.use_kernel``) or the
+    equivalent jnp gather. Both produce identical popcounts, so downstream
+    estimates are bit-identical.
+    """
+    if sketch.kind != "bf":
+        raise ValueError("tuple_cardinality_ones needs a Bloom sketch")
+    k = tuples.shape[1]
+    ce = setexpr.compile_expr(setexpr.and_all(*setexpr.rows(k)),
+                              block_e=plan.block_e, block_w=plan.block_w,
+                              use_kernel=plan.use_kernel)
+    return ce.ones(sketch.data, tuples)
+
+
 def triple_cardinality_ones(sketch: SketchSet, triples: jax.Array,
                             plan: EnginePlan) -> jax.Array:
     """popcnt(Bu & Bv & Bw) per (u, v, w) triple — int32[T].
 
-    Kernel path gathers the three rows per grid step (block-gather); jnp
-    path materializes the gathered rows. Both produce identical popcounts,
-    so downstream estimates are bit-identical.
+    The k=3 case of :func:`tuple_cardinality_ones` (kept as the named
+    4-clique seam).
     """
-    if sketch.kind != "bf":
-        raise ValueError("triple_cardinality_ones needs a Bloom sketch")
-    if plan.use_kernel:
-        from ..kernels import ops as kops
-        return kops.bf_edge_intersect3(sketch.data, triples,
-                                       block_e=plan.block_e,
-                                       block_w=plan.block_w)
-    ru = jnp.take(sketch.data, triples[:, 0], axis=0)
-    rv = jnp.take(sketch.data, triples[:, 1], axis=0)
-    rw = jnp.take(sketch.data, triples[:, 2], axis=0)
-    return jnp.sum(jax.lax.population_count(ru & rv & rw), axis=-1
-                   ).astype(jnp.int32)
+    return tuple_cardinality_ones(sketch, triples, plan)
 
 
 def wedge_triple_ones(sketch: SketchSet, u: jax.Array, v: jax.Array,
@@ -173,6 +183,36 @@ def wedge_triple_ones(sketch: SketchSet, u: jax.Array, v: jax.Array,
     rv = jnp.take(sketch.data, v, axis=0)[:, None, :]
     rw = jnp.take(sketch.data, w_grid, axis=0)
     return jnp.sum(jax.lax.population_count(ru & rv & rw), axis=-1
+                   ).astype(jnp.int32)
+
+
+def wedge_quad_ones(sketch: SketchSet, u: jax.Array, v: jax.Array,
+                    w_grid: jax.Array, x_grid: jax.Array,
+                    plan: EnginePlan) -> jax.Array:
+    """popcnt(Bu & Bv & Bw & Bx) over a wedge-pair grid: u, v int32[C],
+    w int32[C, dw], x int32[C, dx] -> int32[C, dw, dx] (the 5-clique 4-way
+    intersection provider).
+
+    Kernel path flattens to (u, v, w, x) quads for the compiled 4-way AND
+    expression — the workload that needed no new hand-rolled kernel; the
+    jnp path keeps the broadcast form so u/v rows are gathered once per
+    edge. Identical integer popcounts either way.
+    """
+    c, dw = w_grid.shape
+    dx = x_grid.shape[1]
+    if plan.use_kernel:
+        quads = jnp.stack([
+            jnp.broadcast_to(u[:, None, None], (c, dw, dx)).reshape(-1),
+            jnp.broadcast_to(v[:, None, None], (c, dw, dx)).reshape(-1),
+            jnp.broadcast_to(w_grid[:, :, None], (c, dw, dx)).reshape(-1),
+            jnp.broadcast_to(x_grid[:, None, :], (c, dw, dx)).reshape(-1),
+        ], axis=1)
+        return tuple_cardinality_ones(sketch, quads, plan).reshape(c, dw, dx)
+    ru = jnp.take(sketch.data, u, axis=0)[:, None, None, :]
+    rv = jnp.take(sketch.data, v, axis=0)[:, None, None, :]
+    rw = jnp.take(sketch.data, w_grid, axis=0)[:, :, None, :]
+    rx = jnp.take(sketch.data, x_grid, axis=0)[:, None, :, :]
+    return jnp.sum(jax.lax.population_count(ru & rv & rw & rx), axis=-1
                    ).astype(jnp.int32)
 
 
@@ -316,6 +356,12 @@ class MiningSession:
         """Scalar 4-clique count estimate (3-way sketch intersections)."""
         from ..core.algorithms.cliques import four_clique_count
         return four_clique_count(self.graph, self.sketch, plan=self.plan, **kw)
+
+    def five_clique_count(self, **kw) -> jax.Array:
+        """Scalar 5-clique count estimate (4-way sketch intersections)."""
+        from ..core.algorithms.cliques import five_clique_count
+        return five_clique_count(self.graph, self.sketch, plan=self.plan,
+                                 **kw)
 
     def similarity(self, pairs: jax.Array, measure: str = "jaccard"
                    ) -> jax.Array:

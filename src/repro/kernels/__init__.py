@@ -1,4 +1,32 @@
-"""Pallas TPU kernels for ProbGraph hot spots (+ ops wrappers, ref oracles)."""
-from . import ops, ref
+"""Pallas TPU kernels for ProbGraph hot spots.
 
-__all__ = ["ops", "ref"]
+Public surface: the padded entrypoints in :mod:`repro.kernels.ops` (re-
+exported here), the generalized fused expression pass in
+:mod:`repro.kernels.fused_expr`, and the pure-jnp oracles in
+:mod:`repro.kernels.ref`. The raw per-workload kernels in
+``bf_intersect.py`` are private; their old public names warn.
+"""
+from . import fused_expr, ops, ref
+from .fused_expr import fused_gather_popcount, fused_rows_popcount
+from .ops import (
+    bf_edge_intersect,
+    bf_edge_intersect3,
+    bf_intersect_pairs,
+    bf_intersect3_pairs,
+    khash_match_pairs,
+    mh_intersect_pairs,
+)
+
+__all__ = [
+    "bf_edge_intersect",
+    "bf_edge_intersect3",
+    "bf_intersect_pairs",
+    "bf_intersect3_pairs",
+    "fused_expr",
+    "fused_gather_popcount",
+    "fused_rows_popcount",
+    "khash_match_pairs",
+    "mh_intersect_pairs",
+    "ops",
+    "ref",
+]

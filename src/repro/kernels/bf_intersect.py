@@ -27,11 +27,19 @@ Callers must pad: E to a multiple of ``block_e`` (pad edges with (0, 0) —
 row 0 always exists and results are sliced off) and W to a multiple of
 ``block_w`` (zero words contribute no bits). ``repro.kernels.ops`` does both.
 
+These raw kernels are now *private* (``_pairs_impl``/``_edge_impl`` family):
+the public seam is ``repro.kernels.ops``, whose entrypoints compile the
+equivalent set expression (``repro.engine.setexpr``) down to the generalized
+fused pass in ``fused_expr.py``. The old public names here remain importable
+as ``DeprecationWarning`` shims, and the private impls double as the golden
+oracles the bit-identity tests compare the compiled expressions against.
+
 All kernels validate in interpret mode against ``ref.py`` (see tests).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +52,7 @@ from jax.experimental.pallas import tpu as pltpu
 # ----------------------------------------------------------------------------
 
 def _pairs_kernel(a_ref, b_ref, o_ref):
+    """AND+popcount one (block_e, block_w) tile pair, accumulating over j."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -54,8 +63,8 @@ def _pairs_kernel(a_ref, b_ref, o_ref):
     o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
 
 
-def bf_intersect_pairs(a: jax.Array, b: jax.Array, *, block_e: int = 256,
-                       block_w: int = 512, interpret: bool = False) -> jax.Array:
+def _pairs_impl(a: jax.Array, b: jax.Array, *, block_e: int = 256,
+                block_w: int = 512, interpret: bool = False) -> jax.Array:
     """uint32[E, W] x uint32[E, W] -> int32[E]; E, W already block-padded."""
     e, w = a.shape
     block_e = min(block_e, e)
@@ -75,6 +84,7 @@ def bf_intersect_pairs(a: jax.Array, b: jax.Array, *, block_e: int = 256,
 
 
 def _pairs3_kernel(a_ref, b_ref, c_ref, o_ref):
+    """3-way AND+popcount one tile triple, accumulating over j."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -85,9 +95,10 @@ def _pairs3_kernel(a_ref, b_ref, c_ref, o_ref):
     o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
 
 
-def bf_intersect3_pairs(a: jax.Array, b: jax.Array, c: jax.Array, *,
-                        block_e: int = 256, block_w: int = 512,
-                        interpret: bool = False) -> jax.Array:
+def _pairs3_impl(a: jax.Array, b: jax.Array, c: jax.Array, *,
+                 block_e: int = 256, block_w: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """3-way dense variant of :func:`_pairs_impl` -> int32[E]."""
     e, w = a.shape
     block_e = min(block_e, e)
     block_w = min(block_w, w)
@@ -116,17 +127,20 @@ def _gather_rows(ids_ref, base, bloom_ref, bufs, sems, *, count, block_w, j):
     at once instead of serializing row by row.
     """
     def row_copies(r):
+        """The per-slab async copies fetching row ``r`` of this burst."""
         return [pltpu.make_async_copy(
             bloom_ref.at[ids[base + r], pl.ds(j * block_w, block_w)],
             buf.at[r], sems.at[s])
             for s, (ids, buf) in enumerate(zip(ids_ref, bufs))]
 
     def start(r, carry):
+        """fori_loop body: launch row ``r``'s copies without blocking."""
         for cp in row_copies(r):
             cp.start()
         return carry
 
     def wait(r, carry):
+        """fori_loop body: block until row ``r``'s copies have landed."""
         for cp in row_copies(r):
             cp.wait()
         return carry
@@ -137,6 +151,7 @@ def _gather_rows(ids_ref, base, bloom_ref, bufs, sems, *, count, block_w, j):
 
 def _edge_block_kernel(u_ref, v_ref, bloom_ref, o_ref, a_buf, b_buf, sems, *,
                        block_e, block_w):
+    """Gather block_e row pairs, AND+popcount the slabs, accumulate over j."""
     i = pl.program_id(0)
     j = pl.program_id(1)
     _gather_rows((u_ref, v_ref), i * block_e, bloom_ref, (a_buf, b_buf), sems,
@@ -150,8 +165,8 @@ def _edge_block_kernel(u_ref, v_ref, bloom_ref, o_ref, a_buf, b_buf, sems, *,
     o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
 
 
-def bf_edge_intersect(bloom: jax.Array, edges: jax.Array, *, block_e: int = 8,
-                      block_w: int = 512, interpret: bool = False) -> jax.Array:
+def _edge_impl(bloom: jax.Array, edges: jax.Array, *, block_e: int = 8,
+               block_w: int = 512, interpret: bool = False) -> jax.Array:
     """uint32[n, W] sketch matrix + int32[E, 2] edges -> int32[E].
 
     Block-gather: grid = (E/block_e, W/block_w); each step DMAs block_e
@@ -186,6 +201,7 @@ def bf_edge_intersect(bloom: jax.Array, edges: jax.Array, *, block_e: int = 8,
 
 def _edge3_block_kernel(u_ref, v_ref, w_ref, bloom_ref, o_ref, a_buf, b_buf,
                         c_buf, sems, *, block_e, block_w):
+    """3-slab variant of :func:`_edge_block_kernel` for (u, v, w) triples."""
     i = pl.program_id(0)
     j = pl.program_id(1)
     _gather_rows((u_ref, v_ref, w_ref), i * block_e, bloom_ref,
@@ -200,12 +216,12 @@ def _edge3_block_kernel(u_ref, v_ref, w_ref, bloom_ref, o_ref, a_buf, b_buf,
     o_ref[...] += jnp.sum(cnt.astype(jnp.int32), axis=1)
 
 
-def bf_edge_intersect3(bloom: jax.Array, triples: jax.Array, *,
-                       block_e: int = 8, block_w: int = 512,
-                       interpret: bool = False) -> jax.Array:
+def _edge3_impl(bloom: jax.Array, triples: jax.Array, *,
+                block_e: int = 8, block_w: int = 512,
+                interpret: bool = False) -> jax.Array:
     """uint32[n, W] + int32[T, 3] triples -> int32[T] popcnt(Bu & Bv & Bw).
 
-    Same block-gather treatment as ``bf_edge_intersect`` with three slabs —
+    Same block-gather treatment as :func:`_edge_impl` with three slabs —
     the 4-clique triple-intersection hot loop.
     """
     n, w = bloom.shape
@@ -233,3 +249,40 @@ def bf_edge_intersect3(bloom: jax.Array, triples: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
         interpret=interpret,
     )(triples[:, 0], triples[:, 1], triples[:, 2], bloom)
+
+
+# ----------------------------------------------------------------------------
+# deprecation shims for the old public (raw, unpadded) entrypoints
+# ----------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str, impl):
+    """Wrap a private impl as a ``DeprecationWarning``-emitting shim."""
+    @functools.wraps(impl)
+    def shim(*args, **kwargs):
+        """Forward to the private impl after warning (deprecated name)."""
+        warnings.warn(
+            f"repro.kernels.bf_intersect.{old} is deprecated; use {new}",
+            DeprecationWarning, stacklevel=2)
+        return impl(*args, **kwargs)
+
+    shim.__name__ = old
+    shim.__qualname__ = old
+    shim.__doc__ = (f"Deprecated alias of the raw kernel; use {new}. "
+                    f"See ``repro.engine.setexpr`` for arbitrary expressions.")
+    return shim
+
+
+bf_intersect_pairs = _deprecated(
+    "bf_intersect_pairs", "repro.kernels.ops.bf_intersect_pairs", _pairs_impl)
+bf_intersect3_pairs = _deprecated(
+    "bf_intersect3_pairs", "repro.kernels.ops.bf_intersect3_pairs",
+    _pairs3_impl)
+bf_edge_intersect = _deprecated(
+    "bf_edge_intersect", "repro.kernels.ops.bf_edge_intersect", _edge_impl)
+bf_edge_intersect3 = _deprecated(
+    "bf_edge_intersect3", "repro.kernels.ops.bf_edge_intersect3", _edge3_impl)
+
+__all__ = [
+    "bf_edge_intersect", "bf_edge_intersect3", "bf_intersect_pairs",
+    "bf_intersect3_pairs",
+]

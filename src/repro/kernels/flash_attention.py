@@ -44,6 +44,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, window: int,
     nkv = skv // block_kv
 
     def body(j, carry):
+        """Online-softmax update over one (bq, block_kv) score tile."""
         m, l, acc = carry
         k_blk = lax.dynamic_slice_in_dim(k_ref[0], j * block_kv, block_kv, 0)
         v_blk = lax.dynamic_slice_in_dim(v_ref[0], j * block_kv, block_kv, 0)

@@ -145,6 +145,7 @@ def mine_session(graph: G.Graph, algos: list[str], storage_budget: float = 0.25,
         "tc": lambda: float(sess.triangle_count()),
         "lcc": lambda: float(jnp.mean(sess.local_clustering())),
         "4clique": lambda: float(sess.four_clique_count()),
+        "cliques5": lambda: float(sess.five_clique_count()),
         "jp": lambda: int(sess.jarvis_patrick("jaccard", 0.05)[1]),
         "localcluster": run_localcluster,
     }
@@ -164,7 +165,8 @@ def main():
     ap.add_argument("--budget", type=float, default=0.25)
     ap.add_argument("--exact", action="store_true", help="also run exact TC")
     ap.add_argument("--algos", type=str, default="",
-                    help="comma list (tc,lcc,4clique,jp,localcluster): run a "
+                    help="comma list (tc,lcc,4clique,cliques5,jp,"
+                         "localcluster): run a "
                          "multi-query engine session over one shared sketch "
                          "build")
     ap.add_argument("--use-kernel", action="store_true",

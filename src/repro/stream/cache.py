@@ -35,7 +35,7 @@ from typing import Dict, Optional, Set, Tuple
 
 import numpy as np
 
-from ..engine.engine import Footprint
+from ..engine.api import Footprint
 
 # slack (in volume units = 2·edges) for the local-cluster volume guard: the
 # sweep's cumsum runs in float32, so a prefix within one edge of half the

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import Graph, canonical_edge_keys, graph_view
-from ..engine.plan import pow2_bucket
+from ..engine.api import pow2_bucket
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,7 +38,7 @@ from ..core.sketches import (KMV_PAD, PAD_HASH, SketchSet, _map_vertex_chunks,
                              _positions, bloom_rows, bloom_words_for_budget,
                              khash_rows, kmv_rows, minhash_k_for_budget,
                              onehash_rows, onehash_values, pack_bits)
-from ..engine.plan import pow2_bucket
+from ..engine.api import pow2_bucket
 from .dynamic_graph import DeltaResult, DynamicGraph
 
 

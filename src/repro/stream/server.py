@@ -41,9 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.algorithms.similarity import similarity_from_cardinalities
-from ..engine import engine as eng
-from ..engine.engine import Footprint
-from ..engine.plan import pow2_bucket
+from ..engine import api as eng
+from ..engine.api import Footprint, pow2_bucket
 from .cache import ResultCache
 from .session import StreamSession
 
@@ -68,7 +67,7 @@ class QueryResult:
 @dataclasses.dataclass
 class _Pending:
     request_id: int
-    kind: str          # similarity | linkpred | membership | tc | localcluster
+    kind: str   # similarity | linkpred | membership | tc | cliques | localcluster
     key: Tuple         # canonical (kind, args…) — the cache/coalescing unit
     measure: str
     pairs: Optional[np.ndarray]     # [P, 2] for similarity requests
@@ -210,6 +209,17 @@ class BatchedQueryServer:
     def submit_triangle_count(self) -> int:
         """Triangle-count query over the live graph (shared engine pass)."""
         return self._submit("tc", ("tc",))
+
+    def submit_clique_count(self, k: int = 4) -> int:
+        """k-clique-count query (k in {4, 5}) over the live graph.
+
+        Both sizes fold every edge, so like ``tc`` they carry a whole-graph
+        footprint: any delta invalidates a cached count. k = 5 runs through
+        the engine's compiled 4-way AND set expression.
+        """
+        if k not in (4, 5):
+            raise ValueError(f"clique count supports k in {{4, 5}}, got {k}")
+        return self._submit("cliques", ("cliques", int(k)), k=int(k))
 
     def submit_local_cluster(self, seed: int, alpha: float = 0.15,
                              eps: float = 1e-4) -> int:
@@ -430,6 +440,12 @@ class BatchedQueryServer:
                 fp = Footprint.of(p0.payload["u"])
             elif kind == "tc":
                 value = float(sess.triangle_count())
+                fp = Footprint.whole_graph()
+            elif kind == "cliques":
+                if p0.payload["k"] == 5:
+                    value = float(self.stream.five_clique_count())
+                else:
+                    value = float(self.stream.four_clique_count())
                 fp = Footprint.whole_graph()
             else:  # pragma: no cover - guarded at submit time
                 raise ValueError(kind)

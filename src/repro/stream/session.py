@@ -31,8 +31,8 @@ import numpy as np
 
 from ..checkpoint import store
 from ..core.sketches import SketchSet, bloom_membership
-from ..engine.engine import DeviceCarry, MiningSession, resolve_plan
-from ..engine.plan import EnginePlan, pow2_bucket
+from ..engine.api import (DeviceCarry, EnginePlan, MiningSession,
+                          pow2_bucket, resolve_plan)
 from .dynamic_graph import DynamicGraph
 from .maintenance import ErrorBudgetPolicy, SketchMaintainer
 
@@ -194,6 +194,15 @@ class StreamSession:
     def local_clustering(self) -> jax.Array:
         """Per-vertex clustering coefficients float32[n] (live graph)."""
         return self.session.local_clustering()
+
+    def four_clique_count(self) -> jax.Array:
+        """Scalar 4-clique count estimate over the live graph."""
+        return self.session.four_clique_count()
+
+    def five_clique_count(self) -> jax.Array:
+        """Scalar 5-clique count estimate over the live graph (compiled
+        4-way AND set expression — see ``repro.engine.setexpr``)."""
+        return self.session.five_clique_count()
 
     def similarity(self, pairs, measure: str = "jaccard") -> jax.Array:
         """Similarity scores float32[P] for vertex pairs on the live graph."""

@@ -5,8 +5,13 @@ Scans the given markdown files/directories for inline links and images
 disk or names a missing ``#anchor`` in a markdown file. External links
 (http/https/mailto) are not fetched — CI must not depend on the network.
 
+Python sources are checked too: directories are also scanned for ``*.py``,
+where only link targets ending in ``.md`` (before any ``#anchor``) are
+validated — docstrings routinely contain ``foo[0](arg)``-shaped text that
+the markdown link regex would otherwise flag.
+
 Usage:
-    python tools/check_links.py README.md docs ROADMAP.md
+    python tools/check_links.py README.md docs src/repro/kernels
 """
 from __future__ import annotations
 
@@ -42,13 +47,16 @@ def anchors_of(md_path: Path) -> set[str]:
 
 
 def check_file(md_path: Path) -> list[str]:
-    """Return human-readable problems for one markdown file."""
+    """Return human-readable problems for one markdown or python file."""
     problems = []
+    md_only = md_path.suffix == ".py"
     text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
     for target in LINK_RE.findall(text):
         if target.startswith(("http://", "https://", "mailto:")):
             continue
         path_part, _, anchor = target.partition("#")
+        if md_only and not path_part.endswith(".md"):
+            continue  # a [x](y) in code is usually not a link at all
         dest = (md_path.parent / path_part).resolve() if path_part \
             else md_path.resolve()
         if not dest.exists():
@@ -61,12 +69,13 @@ def check_file(md_path: Path) -> list[str]:
 
 
 def main(argv: list[str]) -> int:
-    """Check every .md under the given files/directories; 1 if broken."""
+    """Check every .md and .py under the given files/directories; 1 if broken."""
     files: list[Path] = []
     for arg in argv or ["README.md", "docs"]:
         p = Path(arg)
         if p.is_dir():
             files.extend(sorted(p.rglob("*.md")))
+            files.extend(sorted(p.rglob("*.py")))
         elif p.exists():
             files.append(p)
         else:
