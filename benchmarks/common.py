@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, warmup spans, structured records."""
 from __future__ import annotations
 
 import time
@@ -7,7 +7,50 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.obs import trace
+
 ROWS = []
+RECORDS = []
+
+
+def reset_records() -> None:
+    """Start a fresh row/record set (benchmarks.run calls this per suite)."""
+    ROWS.clear()
+    RECORDS.clear()
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k1=v1;k2=v2`` derived strings -> a flat metrics dict.
+
+    Values float-coerce where possible (trailing ``x`` ratio suffixes are
+    stripped); everything else stays a string. Bare tokens become ``True``.
+    """
+    out = {}
+    for part in filter(None, derived.split(";")):
+        if "=" not in part:
+            out[part] = True
+            continue
+        k, _, v = part.partition("=")
+        try:
+            out[k] = float(v[:-1] if v.endswith("x") else v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def dress_rehearsal(fn: Callable, label: str = "bench.warmup"):
+    """Run ``fn`` once as an explicit, span-marked warmup.
+
+    Hoists the shared warm-up discipline out of individual suites: the call
+    compiles/warms whatever the benchmark is about to time, is excluded from
+    reported stats by construction, and shows up in traces as its own
+    ``bench.warmup`` span instead of polluting iteration 0.
+    """
+    with trace.span(label) as sp:
+        out = fn()
+        sp.fence(out)
+    jax.block_until_ready(out)
+    return out
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -25,6 +68,14 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
+    """Print/record one result row.
+
+    Keeps the human CSV line and additionally appends a schema-consistent
+    record — ``{"name", "wall_s", "metrics"}`` — to :data:`RECORDS` so
+    benchmarks.run can write machine-diffable ``BENCH_*.json`` files.
+    """
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "wall_s": us_per_call * 1e-6,
+                    "metrics": _parse_derived(derived)})
     print(row, flush=True)

@@ -26,9 +26,10 @@ import time
 import numpy as np
 
 from repro.core import graph as G
+from repro.obs import trace
 from repro.stream import BatchedQueryServer, DynamicGraph, StreamSession
 
-from .common import emit
+from .common import dress_rehearsal, emit
 
 # request mix: pair scoring dominates real lookalike/recommendation traffic;
 # tc is the rare whole-graph dashboard query that no delta lets survive
@@ -145,7 +146,8 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         total: int = 2048, zipf_s: float = 1.0, delta_every: int = 256,
         delta_edges: int = 16, min_batch: int = 16, flush_every: int = 2,
         budget: float = 0.5, seed: int = 3, json_path=None,
-        check_speedup: float = 0.0) -> dict:
+        check_speedup: float = 0.0, trace_json=None,
+        check_trace_overhead: float = 0.0) -> dict:
     """One full cache-off vs cache-on replay; returns the summary dict."""
     st0, _ = _fresh_session(scale, edge_factor, budget, seed, 0.2)
     n = st0.dyn.n
@@ -161,15 +163,41 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         for use_cache in (False, True):
             st, arrivals = _fresh_session(scale, edge_factor, budget, seed,
                                           0.2)
-            results, wall, stats = replay(
-                st, arrivals, population, ranks, use_cache, delta_every,
-                delta_edges, min_batch, flush_every)
-            if timed:
-                lat = np.asarray([results[i].latency_s
-                                  for i in range(len(ranks))])
-                modes[use_cache] = (results, wall, stats, lat)
+
+            def one_replay(st=st, arrivals=arrivals, use_cache=use_cache):
+                return replay(st, arrivals, population, ranks, use_cache,
+                              delta_every, delta_edges, min_batch,
+                              flush_every)
+
+            if not timed:
+                dress_rehearsal(one_replay)
+                continue
+            results, wall, stats = one_replay()
+            lat = np.asarray([results[i].latency_s
+                              for i in range(len(ranks))])
+            modes[use_cache] = (results, wall, stats, lat)
 
     off, on = modes[False], modes[True]
+
+    # optional traced replay: one extra cache-on pass with span recording
+    # enabled, to (a) export the nightly Perfetto artifact and (b) measure
+    # the enabled-path tracing overhead against the untraced cache-on pass
+    trace_overhead = None
+    if trace_json or check_trace_overhead:
+        was_enabled = trace.enabled()
+        trace.enable()
+        trace.clear()
+        st, arrivals = _fresh_session(scale, edge_factor, budget, seed, 0.2)
+        results_t, _, _ = replay(st, arrivals, population, ranks, True,
+                                 delta_every, delta_edges, min_batch,
+                                 flush_every)
+        lat_t = np.asarray([results_t[i].latency_s
+                            for i in range(len(ranks))])
+        if trace_json:
+            trace.export(trace_json)
+        if not was_enabled:
+            trace.disable()
+        trace_overhead = float(lat_t.mean() / max(on[3].mean(), 1e-12) - 1.0)
     mismatch = sum(
         not _values_equal(off[0][i].value, on[0][i].value)
         for i in range(len(ranks)))
@@ -194,6 +222,10 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         "answers_bit_identical": mismatch == 0,
         "mismatches": mismatch,
     }
+    if trace_overhead is not None:
+        summary["trace_overhead_mean"] = round(trace_overhead, 4)
+    if trace_json:
+        summary["trace_json"] = trace_json
     emit(f"serving_replay_s{scale}_zipf{zipf_s}", on[3].mean() * 1e6,
          f"hit_rate={summary['hit_rate']:.2f};"
          f"speedup_mean={summary['speedup_mean']:.1f}x;"
@@ -212,6 +244,12 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         raise RuntimeError(
             f"mean-latency speedup {summary['speedup_mean']:.2f}x "
             f"< required {check_speedup:.1f}x")
+    if check_trace_overhead and trace_overhead is not None \
+            and trace_overhead > check_trace_overhead / 100.0:
+        raise RuntimeError(
+            f"tracing-enabled mean-latency overhead "
+            f"{trace_overhead * 100:.1f}% > allowed "
+            f"{check_trace_overhead:.1f}%")
     return summary
 
 
@@ -228,6 +266,13 @@ def main() -> None:
     ap.add_argument("--check-speedup", type=float, default=3.0,
                     help="exit nonzero below this mean-latency improvement "
                          "(0 disables)")
+    ap.add_argument("--trace-json", type=str, default=None,
+                    help="run one extra traced cache-on replay and write its "
+                         "Chrome-trace/Perfetto JSON to this path")
+    ap.add_argument("--check-trace-overhead", type=float, default=0.0,
+                    help="exit nonzero if the traced replay's mean latency "
+                         "exceeds the untraced one by more than this many "
+                         "percent (0 disables; implies the traced replay)")
     args = ap.parse_args()
     kw = {}
     if args.smoke:
@@ -240,7 +285,8 @@ def main() -> None:
         kw["distinct"] = args.distinct
     try:
         run(zipf_s=args.zipf, json_path=args.json,
-            check_speedup=args.check_speedup, **kw)
+            check_speedup=args.check_speedup, trace_json=args.trace_json,
+            check_trace_overhead=args.check_trace_overhead, **kw)
     except RuntimeError as exc:
         print(f"# FAIL: {exc}")
         sys.exit(1)

@@ -1,3 +1,3 @@
-from . import hlo, roofline
+from . import hlo, live, roofline
 
-__all__ = ["hlo", "roofline"]
+__all__ = ["hlo", "live", "roofline"]

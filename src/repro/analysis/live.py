@@ -1,0 +1,53 @@
+"""Live roofline accounting: HLO cost of a compiled fn vs. measured wall time.
+
+First runtime consumer of ``analysis/``: :func:`record_roofline` takes a
+compiled (``.lower().compile()``-ed) JAX callable plus a measured wall time
+from a traced span or bench, analyzes its optimized HLO with
+:func:`repro.analysis.hlo.analyze`, computes the roofline lower bound
+``max(flops / PEAK_FLOPS_BF16, bytes_proxy / HBM_BW)``, and publishes the
+achieved-vs-roofline fraction as ``roofline_fraction{op=...}`` gauges in the
+metrics registry. Benches append the fraction to their emitted records, so
+the nightly perf trajectory carries "how far from the hardware ceiling"
+alongside raw latency.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+
+from .hlo import HloStats, analyze
+from .roofline import HBM_BW, PEAK_FLOPS_BF16
+
+
+def hlo_cost(compiled) -> HloStats:
+    """HLO cost stats for a compiled JAX callable (``.as_text()`` parse)."""
+    return analyze(compiled.as_text())
+
+
+def roofline_bound_s(stats: HloStats) -> float:
+    """Roofline lower-bound runtime (s): compute-bound vs. memory-bound."""
+    return max(stats.flops / PEAK_FLOPS_BF16, stats.bytes_proxy / HBM_BW)
+
+
+def record_roofline(name: str, compiled, wall_s: float,
+                    registry: Optional[MetricsRegistry] = None) -> dict:
+    """Gauge the achieved-vs-roofline fraction for one measured op.
+
+    ``fraction = bound_s / wall_s`` — 1.0 means running at the roofline
+    envelope, small values mean overhead-dominated. Emits
+    ``roofline_fraction{op=name}`` and ``roofline_bound_s{op=name}`` gauges
+    and returns ``{"flops", "bytes_proxy", "bound_s", "wall_s",
+    "fraction"}``.
+    """
+    reg = REGISTRY if registry is None else registry
+    stats = hlo_cost(compiled)
+    bound = roofline_bound_s(stats)
+    fraction = bound / wall_s if wall_s > 0 else 0.0
+    reg.gauge("roofline_fraction", op=name).set(fraction)
+    reg.gauge("roofline_bound_s", op=name).set(bound)
+    return {"flops": stats.flops, "bytes_proxy": stats.bytes_proxy,
+            "bound_s": bound, "wall_s": wall_s, "fraction": fraction}
+
+
+__all__ = ["hlo_cost", "record_roofline", "roofline_bound_s"]

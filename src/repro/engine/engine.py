@@ -30,6 +30,7 @@ from ..core.graph import Graph
 from ..core.intersect import CardFn, make_pair_cardinality_fn
 from ..core.sketches import SketchSet, build as build_sketch
 from ..distributed import sharding
+from ..obs import trace
 from . import setexpr
 from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
                    order_edges_by_hub, plan_for, pow2_bucket)
@@ -329,8 +330,10 @@ class MiningSession:
     def edge_cardinalities(self) -> jax.Array:
         """Cached |N_u ∩ N_v| over graph.edges (the shared mining pass)."""
         if self._edge_cards is None:
-            self._edge_cards = edge_cardinalities(
-                self.graph, self.sketch, self.plan)
+            with trace.span("engine.edge_cards",
+                            edges=int(self.graph.m)) as sp:
+                self._edge_cards = sp.fence(edge_cardinalities(
+                    self.graph, self.sketch, self.plan))
         return self._edge_cards
 
     def triangle_count(self) -> jax.Array:
@@ -387,8 +390,10 @@ class MiningSession:
           with per-seed sweep order, conductance profile and best prefix.
         """
         from ..core.algorithms.localcluster import local_cluster
-        return local_cluster(self.graph, seeds, alpha, eps, self.sketch,
-                             plan=self.plan, **kw)
+        with trace.span("engine.local_cluster", alpha=float(alpha),
+                        eps=float(eps)):
+            return local_cluster(self.graph, seeds, alpha, eps, self.sketch,
+                                 plan=self.plan, **kw)
 
     def edge_similarity(self, measure: str = "jaccard") -> jax.Array:
         """Similarity scores over graph.edges from the cached shared pass."""
@@ -418,6 +423,12 @@ class MiningSession:
         Per-pair estimators are elementwise in the pair, so recomputing only
         the invalidated subset is bit-identical to a from-scratch pass.
         """
+        with trace.span("engine.refresh") as sp:
+            result = self._refresh(graph, sketch, carry_index)
+            sp.set(recomputed=-1 if result is None else result)
+            return result
+
+    def _refresh(self, graph, sketch, carry_index):
         old_cards = self._edge_cards
         self.graph = graph
         if sketch is not None:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from ..core.graph import Graph
 from ..core.sketches import SketchSet
+from ..obs import trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,12 +72,16 @@ def plan_for(graph: Graph, sketch: Optional[SketchSet] = None,
     VMEM-scale working sets; degree ordering is enabled on the kernel path
     where block locality pays for the one-time sort.
     """
-    words = sketch.data.shape[1] if sketch is not None and sketch.kind == "bf" else 64
-    target_words = 1 << 22                      # ~16 MiB of gathered uint32 rows
-    chunk = max(1024, min(65536, target_words // max(words, 1)))
-    base = EnginePlan(edge_chunk=int(chunk),
-                      degree_order=bool(overrides.get("use_kernel", False)))
-    return base.with_(**overrides)
+    with trace.span("engine.plan_for", n=int(graph.n), m=int(graph.m),
+                    kind=sketch.kind if sketch is not None else "exact"):
+        words = (sketch.data.shape[1]
+                 if sketch is not None and sketch.kind == "bf" else 64)
+        target_words = 1 << 22              # ~16 MiB of gathered uint32 rows
+        chunk = max(1024, min(65536, target_words // max(words, 1)))
+        base = EnginePlan(edge_chunk=int(chunk),
+                          degree_order=bool(overrides.get("use_kernel",
+                                                          False)))
+        return base.with_(**overrides)
 
 
 # ----------------------------------------------------------------------------

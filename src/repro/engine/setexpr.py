@@ -42,6 +42,8 @@ import jax.numpy as jnp
 
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
+from ..obs import trace
+from ..obs.metrics import REGISTRY
 from .plan import pow2_bucket
 
 
@@ -389,9 +391,12 @@ def compile_expr(expr: SetExpr, *, block_e: int = 8, block_w: int = 512,
     hit = _CACHE.get(key)
     if hit is not None:
         _CACHE_HITS += 1
+        REGISTRY.counter("setexpr_compile_total", result="hit").inc()
         return hit
-    ce = CompiledSetExpr(expr, block_e=block_e, block_w=block_w,
-                         use_kernel=use_kernel, interpret=interpret)
+    with trace.span("setexpr.compile", expr=repr(expr)):
+        ce = CompiledSetExpr(expr, block_e=block_e, block_w=block_w,
+                             use_kernel=use_kernel, interpret=interpret)
+    REGISTRY.counter("setexpr_compile_total", result="miss").inc()
     _CACHE[key] = ce
     return ce
 

@@ -41,6 +41,7 @@ from repro.core import graph as G
 from repro.core import sketches as SK
 from repro.core import estimators as E
 from repro import engine as ENG
+from repro.obs import metrics, trace
 
 
 def build_sketches_distributed(graph: G.Graph, mesh: Mesh, words: int,
@@ -172,8 +173,16 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route BF popcounts through the Pallas block-gather "
                          "kernels (TPU; interpret elsewhere)")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record spans and write a Chrome-trace/Perfetto "
+                         "JSON of the run to this path")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print a metric-registry snapshot JSON line")
     args = ap.parse_args()
 
+    if args.trace:
+        trace.enable()
+        trace.clear()
     g = G.kronecker(args.scale, args.edge_factor, seed=1)
     print(f"graph: n={g.n} m={g.m} d_max={g.d_max}")
 
@@ -192,6 +201,7 @@ def main():
             "algos": {name: {"value": val, "seconds": secs}
                       for name, (val, secs) in res.items()},
         }))
+        _emit_obs(args)
         return
 
     ndev = len(jax.devices())
@@ -205,6 +215,18 @@ def main():
         tc = int(X.exact_triangle_count(g))
         print(f"TC_exact={tc} ({time.time()-t0:.2f}s) "
               f"rel_err={abs(out['tc_estimate']-tc)/max(tc,1):.3f}")
+    _emit_obs(args)
+
+
+def _emit_obs(args):
+    """Shared --trace/--metrics epilogue for both run modes."""
+    if args.metrics:
+        print(json.dumps({"event": "metrics",
+                          "global": metrics.REGISTRY.snapshot()}))
+    if args.trace:
+        trace.export(args.trace)
+        trace.disable()
+        print(f"trace -> {args.trace}")
 
 
 if __name__ == "__main__":

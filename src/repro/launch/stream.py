@@ -30,6 +30,7 @@ import numpy as np
 from repro import engine as ENG
 from repro.core import graph as G
 from repro.core import sketches as SK
+from repro.obs import metrics, trace
 from repro.stream import (BatchedQueryServer, DynamicGraph, ErrorBudgetPolicy,
                           StreamSession)
 
@@ -104,8 +105,16 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=5)
     ap.add_argument("--restore", action="store_true",
                     help="resume from the latest checkpoint in --checkpoint-dir")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record spans and write a Chrome-trace/Perfetto "
+                         "JSON of the replay to this path")
+    ap.add_argument("--metrics", action="store_true",
+                    help="embed metric-registry snapshots in the summary")
     args = ap.parse_args()
 
+    if args.trace:
+        trace.enable()
+        trace.clear()
     n, initial, arrivals = build_stream(args.scale, args.edge_factor,
                                         args.stream_frac, args.seed)
     kind = None if args.kind == "exact" else args.kind
@@ -196,6 +205,14 @@ def main():
                "verify_all_exact": all(r["verify"]["exact_match"]
                                        for r in batch_rows)
                if args.verify and batch_rows else None}
+    if args.metrics:
+        summary["metrics"] = {"global": metrics.REGISTRY.snapshot(),
+                              "stream": st.metrics.snapshot(),
+                              "server": server.metrics.snapshot()}
+    if args.trace:
+        trace.export(args.trace)
+        trace.disable()
+        summary["trace"] = args.trace
     print(json.dumps(summary))
 
 

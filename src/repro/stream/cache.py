@@ -36,6 +36,7 @@ from typing import Dict, Optional, Set, Tuple
 import numpy as np
 
 from ..engine.api import Footprint
+from ..obs import trace
 
 # slack (in volume units = 2·edges) for the local-cluster volume guard: the
 # sweep's cumsum runs in float32, so a prefix within one edge of half the
@@ -175,17 +176,20 @@ class ResultCache:
         vertices = np.asarray(vertices).reshape(-1)
         if vertices.size == 0:
             return 0
-        doomed: Set[Tuple] = set()
-        for v in vertices:
-            doomed |= self._by_vertex.get(int(v), set())
-        n_fp = len(doomed)
-        whole = set(self._whole)
-        for key in doomed:
-            self._remove(key)
-        for key in whole:
-            self._remove(key)
-        self.evicted_footprint += n_fp
-        self.evicted_whole += len(whole)
+        with trace.span("cache.invalidate",
+                        vertices=int(vertices.size)) as sp:
+            doomed: Set[Tuple] = set()
+            for v in vertices:
+                doomed |= self._by_vertex.get(int(v), set())
+            n_fp = len(doomed)
+            whole = set(self._whole)
+            for key in doomed:
+                self._remove(key)
+            for key in whole:
+                self._remove(key)
+            self.evicted_footprint += n_fp
+            self.evicted_whole += len(whole)
+            sp.set(evicted_footprint=n_fp, evicted_whole=len(whole))
         return n_fp + len(whole)
 
     def clear(self) -> None:

@@ -32,6 +32,8 @@ import numpy as np
 
 from ..core.graph import Graph, canonical_edge_keys, graph_view
 from ..engine.api import pow2_bucket
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,31 +94,58 @@ class TrafficMeter:
     can be zero-copy on CPU and the session-open uploads pass ``dyn.deg`` /
     ``dyn.adj``, which later deltas mutate in place; delta-path callers all
     pass freshly built padded buffers, so they skip the copy.
+
+    The numbers live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    (``traffic_bytes{path=init|delta}``, ``traffic_bytes_last_delta``,
+    ``traffic_steps``); the historical attribute names (``bytes_init`` etc.)
+    and the ``stats()`` dict are views over those instruments, shape- and
+    value-identical to the pre-registry meter.
     """
 
-    def __init__(self):
-        self.bytes_init = 0         # one-time device residency (session open)
-        self.bytes_total = 0        # cumulative delta-path uploads
-        self.bytes_delta = 0        # uploads since the last begin_delta()
-        self.steps = 0              # committed delta/flush traffic steps
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = MetricsRegistry() if registry is None else registry
+        self._init = self.registry.counter("traffic_bytes", path="init")
+        self._total = self.registry.counter("traffic_bytes", path="delta")
+        self._last = self.registry.gauge("traffic_bytes_last_delta")
+        self._steps = self.registry.counter("traffic_steps")
+
+    @property
+    def bytes_init(self) -> int:
+        """One-time device residency bytes (session open)."""
+        return self._init.value
+
+    @property
+    def bytes_total(self) -> int:
+        """Cumulative delta-path upload bytes."""
+        return self._total.value
+
+    @property
+    def bytes_delta(self) -> int:
+        """Upload bytes since the last ``begin_delta()``."""
+        return int(self._last.value)
+
+    @property
+    def steps(self) -> int:
+        """Committed delta/flush traffic steps."""
+        return self._steps.value
 
     def begin_delta(self):
         """Reset the per-delta byte counter (called at each delta's start)."""
-        self.bytes_delta = 0
+        self._last.set(0)
 
     def commit_step(self):
         """Count one real delta/flush step (no-op steps stay unmetered so
         ``bytes_per_delta_mean`` reflects deltas that did work)."""
-        self.steps += 1
+        self._steps.inc()
 
     def put(self, arr: np.ndarray, init: bool = False) -> jax.Array:
         """Upload a host buffer, metering its bytes (init vs delta path)."""
         host = np.array(arr, copy=True) if init else np.ascontiguousarray(arr)
         if init:
-            self.bytes_init += host.nbytes
+            self._init.inc(host.nbytes)
         else:
-            self.bytes_delta += host.nbytes
-            self.bytes_total += host.nbytes
+            self._last.add(host.nbytes)
+            self._total.inc(host.nbytes)
         return jnp.asarray(host)
 
     def stats(self) -> dict:
@@ -214,6 +243,16 @@ class DeviceGraphState:
                     del_pos: np.ndarray, old_deg_touched: np.ndarray,
                     m_old: int) -> None:
         """Mirror one already-applied host delta with delta-sized uploads."""
+        with trace.span("graph.device_delta", touched=int(delta.touched.size),
+                        inserted=int(delta.inserted.shape[0]),
+                        deleted=int(delta.deleted.shape[0])) as dsp:
+            self._apply_delta(dyn, delta, del_pos, old_deg_touched, m_old)
+            dsp.fence((self.adj, self.deg, self.edges))
+
+    def _apply_delta(self, dyn: "DynamicGraph", delta: "DeltaResult",
+                     del_pos: np.ndarray, old_deg_touched: np.ndarray,
+                     m_old: int) -> None:
+        """The untraced body of :meth:`apply_delta`."""
         _scatter_rows, _scatter_vals, _splice_edges = _update_fns()
         n = self.n
         cap = dyn.capacity
@@ -228,45 +267,49 @@ class DeviceGraphState:
             # rows are partitioned by pow2 width bucket so one hub does not
             # inflate every row's upload to its width (≤ log(cap) scatters,
             # each a reused compiled variant)
-            wv = np.maximum(np.maximum(old_deg_touched, dyn.deg[touched]), 1)
-            wb = np.minimum(2 ** np.ceil(np.log2(wv)).astype(np.int64)
-                            .clip(min=0), cap)
-            for width in np.unique(wb):
-                grp = touched[wb == width]
-                w_b = int(width)
-                t_b = pow2_bucket(grp.size)
+            with trace.span("graph.scatter_rows", rows=int(touched.size)):
+                wv = np.maximum(np.maximum(old_deg_touched,
+                                           dyn.deg[touched]), 1)
+                wb = np.minimum(2 ** np.ceil(np.log2(wv)).astype(np.int64)
+                                .clip(min=0), cap)
+                for width in np.unique(wb):
+                    grp = touched[wb == width]
+                    w_b = int(width)
+                    t_b = pow2_bucket(grp.size)
+                    verts = np.full(t_b, n, dtype=np.int32)
+                    verts[:grp.size] = grp
+                    rows = np.full((t_b, w_b), n, dtype=np.int32)
+                    rows[:grp.size] = dyn.adj[grp, :w_b]
+                    self.adj = _scatter_rows(self.adj, self.meter.put(verts),
+                                             self.meter.put(rows))
+                # degrees are width-independent: one scatter over all touched
+                t_b = pow2_bucket(touched.size)
                 verts = np.full(t_b, n, dtype=np.int32)
-                verts[:grp.size] = grp
-                rows = np.full((t_b, w_b), n, dtype=np.int32)
-                rows[:grp.size] = dyn.adj[grp, :w_b]
-                self.adj = _scatter_rows(self.adj, self.meter.put(verts),
-                                         self.meter.put(rows))
-            # degrees are width-independent: one scatter over all touched
-            t_b = pow2_bucket(touched.size)
-            verts = np.full(t_b, n, dtype=np.int32)
-            verts[:touched.size] = touched
-            degs = np.zeros(t_b, dtype=np.int32)
-            degs[:touched.size] = dyn.deg[touched]
-            self.deg = _scatter_vals(self.deg, self.meter.put(verts),
-                                     self.meter.put(degs))
+                verts[:touched.size] = touched
+                degs = np.zeros(t_b, dtype=np.int32)
+                degs[:touched.size] = dyn.deg[touched]
+                self.deg = _scatter_vals(self.deg, self.meter.put(verts),
+                                         self.meter.put(degs))
 
         n_ins = int(delta.inserted.shape[0])
-        if self.e_cap < m_old + n_ins:       # edge buffer growth, device-side
-            new_cap = pow2_bucket(m_old + n_ins)
-            self.edges = jnp.pad(self.edges,
-                                 ((0, new_cap - self.e_cap), (0, 0)),
-                                 constant_values=n)
-            self.e_cap = new_cap
-        i_b, d_b = pow2_bucket(n_ins), pow2_bucket(del_pos.size)
-        dpos = np.full(d_b, self.e_cap, dtype=np.int32)   # sentinel -> drop
-        dpos[:del_pos.size] = del_pos
-        ipos = np.full(i_b, self.e_cap, dtype=np.int32)
-        ipos[:n_ins] = m_old + np.arange(n_ins)
-        iuv = np.full((i_b, 2), n, dtype=np.int32)
-        iuv[:n_ins] = delta.inserted
-        self.edges, self.last_carry = _splice_edges(
-            self.edges, self.meter.put(dpos), self.meter.put(ipos),
-            self.meter.put(iuv), m_old, n)
+        with trace.span("graph.splice_edges", inserts=n_ins,
+                        deletes=int(del_pos.size)):
+            if self.e_cap < m_old + n_ins:   # edge buffer growth, device-side
+                new_cap = pow2_bucket(m_old + n_ins)
+                self.edges = jnp.pad(self.edges,
+                                     ((0, new_cap - self.e_cap), (0, 0)),
+                                     constant_values=n)
+                self.e_cap = new_cap
+            i_b, d_b = pow2_bucket(n_ins), pow2_bucket(del_pos.size)
+            dpos = np.full(d_b, self.e_cap, dtype=np.int32)  # sentinel: drop
+            dpos[:del_pos.size] = del_pos
+            ipos = np.full(i_b, self.e_cap, dtype=np.int32)
+            ipos[:n_ins] = m_old + np.arange(n_ins)
+            iuv = np.full((i_b, 2), n, dtype=np.int32)
+            iuv[:n_ins] = delta.inserted
+            self.edges, self.last_carry = _splice_edges(
+                self.edges, self.meter.put(dpos), self.meter.put(ipos),
+                self.meter.put(iuv), m_old, n)
         self.m = dyn.m
 
 
@@ -387,6 +430,15 @@ class DynamicGraph:
         Deletes are applied before inserts, so an edge listed in both ends
         up present (and both endpoints count as dirty).
         """
+        with trace.span("graph.apply_delta") as sp:
+            delta = self._apply_delta(inserts, deletes)
+            sp.set(inserted=int(delta.inserted.shape[0]),
+                   deleted=int(delta.deleted.shape[0]),
+                   touched=int(delta.touched.size), version=delta.version)
+            return delta
+
+    def _apply_delta(self, inserts, deletes) -> DeltaResult:
+        """The untraced body of :meth:`apply_delta`."""
         n = self.n
         cur = self.edge_keys
         del_req = canonical_edge_keys(n, deletes)

@@ -39,6 +39,7 @@ from ..core.sketches import (KMV_PAD, PAD_HASH, SketchSet, _map_vertex_chunks,
                              khash_rows, kmv_rows, minhash_k_for_budget,
                              onehash_rows, onehash_values, pack_bits)
 from ..engine.api import pow2_bucket
+from ..obs import trace
 from .dynamic_graph import DeltaResult, DynamicGraph
 
 
@@ -245,7 +246,10 @@ class SketchMaintainer:
         self.deltas_applied += 1
         verts, new_nbrs = delta.insert_rows(self.dyn.n)
         if verts.size:
-            self._insert(verts, new_nbrs)
+            with trace.span("sketch.insert", kind=self.kind,
+                            rows=int(verts.size)) as sp:
+                self._insert(verts, new_nbrs)
+                sp.fence(self.sketch.data)
             self.rows_incremental += int(verts.size)
         if delta.deleted.size:
             ends = delta.deleted.ravel()
@@ -295,6 +299,12 @@ class SketchMaintainer:
         verts = np.asarray(verts, dtype=np.int64)
         if verts.size == 0:
             return
+        with trace.span("sketch.rebuild", kind=self.kind,
+                        rows=int(verts.size)) as sp:
+            self._rebuild_rows(verts)
+            sp.fence(self.sketch.data)
+
+    def _rebuild_rows(self, verts: np.ndarray):
         # bucket the row count to a power of two so deltas of varying size
         # reuse one compiled builder per (bucket, adjacency-width) pair;
         # padded entries carry row index n and are dropped by the scatter

@@ -43,6 +43,8 @@ import numpy as np
 from ..core.algorithms.similarity import similarity_from_cardinalities
 from ..engine import api as eng
 from ..engine.api import Footprint, pow2_bucket
+from ..obs import accuracy, trace
+from ..obs.metrics import MetricsRegistry
 from .cache import ResultCache
 from .session import StreamSession
 
@@ -138,18 +140,47 @@ class BatchedQueryServer:
         self._queue: List[_Pending] = []
         self._results: Dict[int, QueryResult] = {}
         self._next_id = 0
-        self._served = 0
-        self._flushes = 0
-        self._coalesced = 0
-        self._served_by_kind = collections.Counter()
+        # serving counters live in the per-server metrics registry;
+        # ``stats()`` is a bit-compatible view over these instruments
+        self.metrics = MetricsRegistry()
+        self._c_served = self.metrics.counter("server_served_total")
+        self._c_flushes = self.metrics.counter("server_flushes_total")
+        self._c_coalesced = self.metrics.counter("server_coalesced_total")
         # bounded windows: a long-lived server must not grow per-query state
-        self._latencies = collections.deque(maxlen=stats_window)
-        self._staleness = collections.deque(maxlen=stats_window)
+        self._h_latency = self.metrics.histogram("server_latency_s",
+                                                 window=stats_window)
+        self._h_staleness = self.metrics.histogram("server_staleness",
+                                                   window=stats_window)
         # per-path (real, padded) row counters — membership and seed batches
         # pad very differently from the shared pair pass, so they are not
-        # lumped into one overhead number
+        # lumped into one overhead number; the plain dict stays the write
+        # surface (tests poke it), mirrored into the registry by _pad_add
         self._pad = {"pairs": [0, 0], "membership": [0, 0],
                      "localcluster": [0, 0]}
+        for name in self._pad:
+            self.metrics.counter("server_pad_rows", path=name, rows="real")
+            self.metrics.counter("server_pad_rows", path=name, rows="padded")
+
+    @property
+    def _served(self) -> int:
+        return self._c_served.value
+
+    @property
+    def _flushes(self) -> int:
+        return self._c_flushes.value
+
+    @property
+    def _coalesced(self) -> int:
+        return self._c_coalesced.value
+
+    def _pad_add(self, name: str, real: int, padded: int) -> None:
+        """Meter one padded batch: real vs padded row counts for ``name``."""
+        self._pad[name][0] += real
+        self._pad[name][1] += padded
+        self.metrics.counter("server_pad_rows", path=name,
+                             rows="real").inc(real)
+        self.metrics.counter("server_pad_rows", path=name,
+                             rows="padded").inc(padded)
 
     def close(self) -> None:
         """Detach from the session's invalidation feed and drop the cache.
@@ -290,8 +321,13 @@ class BatchedQueryServer:
         shape class for the misses, then fan out by request id."""
         if not self._queue:
             return
+        with trace.span("server.flush") as fsp:
+            self._flush_body(fsp)
+
+    def _flush_body(self, fsp) -> None:
+        """The traced body of :meth:`_flush_queue` (``fsp`` is its span)."""
         queue, self._queue = self._queue, []
-        self._flushes += 1
+        self._c_flushes.inc()
         sess = self.stream.session
         dyn = self.stream.dyn
         version = self.stream.version
@@ -302,18 +338,27 @@ class BatchedQueryServer:
             collections.OrderedDict()
         for p in queue:
             by_key.setdefault(p.key, []).append(p)
-        self._coalesced += len(queue) - len(by_key)
+        coalesced = len(queue) - len(by_key)
+        self._c_coalesced.inc(coalesced)
 
         answers: Dict[Tuple, object] = {}
         misses: List[Tuple] = []
-        for key in by_key:
-            if self.cache is not None:
-                hit = self.cache.get(
-                    key, vol_now if key[0] == "localcluster" else None)
-                if hit is not None:
-                    answers[key] = hit.value
-                    continue
-            misses.append(key)
+        with trace.span("cache.lookup", keys=len(by_key),
+                        enabled=self.cache is not None) as csp:
+            for key in by_key:
+                if self.cache is not None:
+                    hit = self.cache.get(
+                        key, vol_now if key[0] == "localcluster" else None)
+                    if hit is not None:
+                        answers[key] = hit.value
+                        continue
+                misses.append(key)
+            csp.set(hits=len(by_key) - len(misses))
+        # invariant 8 provenance: every answer in this flush is attributable
+        # to this span's cache/coalesce/pad accounting
+        fsp.set(requests=len(queue), unique_keys=len(by_key),
+                coalesced=coalesced, cache_hits=len(by_key) - len(misses),
+                version=version)
 
         # one shared cardinality pass for ALL uncached pair-scored requests;
         # link-prediction candidates materialize HERE, from the live graph
@@ -337,30 +382,45 @@ class BatchedQueryServer:
             key: np.zeros(0, np.float32) for key in pair_keys}
         total = sum(b.shape[0] for b in pair_blocks)
         if total:
-            pairs = np.concatenate(pair_blocks, axis=0)
-            padded = np.zeros((pow2_bucket(total, self.min_batch), 2),
-                              np.int32)
-            padded[:total] = pairs
-            self._pad["pairs"][0] += total
-            self._pad["pairs"][1] += padded.shape[0]
-            fn = eng.pair_cardinality_fn(sess.graph, sess.sketch, sess.plan)
-            pairs_j = jnp.asarray(padded)
-            cards_j = eng.map_edges(pairs_j, fn, sess.plan)
-            # degrees gathered on device at the queried pairs only — a full
-            # np.asarray(graph.deg) here would move O(n) bytes per flush,
-            # against the streaming path's delta-sized-transfer contract
-            du_j = jnp.take(sess.graph.deg, pairs_j[:, 0]).astype(jnp.float32)
-            dv_j = jnp.take(sess.graph.deg, pairs_j[:, 1]).astype(jnp.float32)
-            cards = np.asarray(cards_j)
-            du_all, dv_all = np.asarray(du_j), np.asarray(dv_j)
-            off = 0
-            for key, block in zip(pair_keys, pair_blocks):
-                k = block.shape[0]
-                scores[key] = np.asarray(similarity_from_cardinalities(
-                    jnp.asarray(cards[off:off + k]),
-                    jnp.asarray(du_all[off:off + k]),
-                    jnp.asarray(dv_all[off:off + k]), by_key[key][0].measure))
-                off += k
+            with trace.span("server.pair_batch", pairs=total) as psp:
+                pairs = np.concatenate(pair_blocks, axis=0)
+                padded = np.zeros((pow2_bucket(total, self.min_batch), 2),
+                                  np.int32)
+                padded[:total] = pairs
+                self._pad_add("pairs", total, padded.shape[0])
+                psp.set(padded=padded.shape[0])
+                pairs_j = jnp.asarray(padded)
+                with trace.span("engine.pair_cards",
+                                pairs=padded.shape[0]) as ksp:
+                    fn = eng.pair_cardinality_fn(sess.graph, sess.sketch,
+                                                 sess.plan)
+                    cards_j = eng.map_edges(pairs_j, fn, sess.plan)
+                    ksp.fence(cards_j)
+                # degrees gathered on device at the queried pairs only — a
+                # full np.asarray(graph.deg) here would move O(n) bytes per
+                # flush, against the streaming path's delta-sized-transfer
+                # contract
+                du_j = jnp.take(sess.graph.deg,
+                                pairs_j[:, 0]).astype(jnp.float32)
+                dv_j = jnp.take(sess.graph.deg,
+                                pairs_j[:, 1]).astype(jnp.float32)
+                cards = np.asarray(cards_j)
+                du_all, dv_all = np.asarray(du_j), np.asarray(dv_j)
+                if sess.sketch is not None:
+                    # live error-interval estimate for the answers just
+                    # computed (real rows only, padding excluded)
+                    accuracy.record_pair_error(
+                        sess.sketch, cards[:total], du_all[:total],
+                        dv_all[:total], self.metrics)
+                off = 0
+                for key, block in zip(pair_keys, pair_blocks):
+                    k = block.shape[0]
+                    scores[key] = np.asarray(similarity_from_cardinalities(
+                        jnp.asarray(cards[off:off + k]),
+                        jnp.asarray(du_all[off:off + k]),
+                        jnp.asarray(dv_all[off:off + k]),
+                        by_key[key][0].measure))
+                    off += k
 
         # one batched push + sweep per (alpha, eps) group of uncached seeds
         # (seeds are unique per group by construction: the key dedups them)
@@ -378,9 +438,12 @@ class BatchedQueryServer:
             padded = np.full(pow2_bucket(seeds.size, self.min_batch),
                              seeds[0], np.int32)
             padded[:seeds.size] = seeds
-            self._pad["localcluster"][0] += seeds.size
-            self._pad["localcluster"][1] += padded.shape[0]
-            res = self.stream.local_cluster(padded, alpha=alpha, eps=eps)
+            self._pad_add("localcluster", int(seeds.size), padded.shape[0])
+            with trace.span("server.localcluster_batch",
+                            seeds=int(seeds.size), padded=padded.shape[0],
+                            alpha=float(alpha), eps=float(eps)) as lsp:
+                res = self.stream.local_cluster(padded, alpha=alpha, eps=eps)
+                lsp.fence(res.best_conductance)
             sizes = np.asarray(res.best_size)
             phis = np.asarray(res.best_conductance)
             sup = np.asarray(res.support)
@@ -433,8 +496,7 @@ class BatchedQueryServer:
                 padded = np.full(pow2_bucket(cand.shape[0], self.min_batch),
                                  dyn.n, np.int32)
                 padded[:cand.shape[0]] = cand
-                self._pad["membership"][0] += cand.shape[0]
-                self._pad["membership"][1] += padded.shape[0]
+                self._pad_add("membership", cand.shape[0], padded.shape[0])
                 value = np.asarray(self.stream.membership(
                     p0.payload["u"], padded))[:cand.shape[0]]
                 fp = Footprint.of(p0.payload["u"])
@@ -460,30 +522,44 @@ class BatchedQueryServer:
             lat = time.perf_counter() - p.t_submit
             res = QueryResult(p.request_id, p.kind, answers[p.key],
                               p.submitted_version, version, lat)
-            self._latencies.append(lat)
-            self._staleness.append(res.staleness)
-            self._served += 1
-            self._served_by_kind[p.kind] += 1
+            self._h_latency.observe(lat)
+            self._h_staleness.observe(res.staleness)
+            self._c_served.inc()
+            self.metrics.counter("server_served_total", kind=p.kind).inc()
             self._results[p.request_id] = res
 
     def stats(self) -> dict:
         """Serving counters: per-kind served/pad numbers, latency
         percentiles (only once something was served), coalescing and cache
-        effectiveness."""
+        effectiveness.
+
+        A view over :attr:`metrics` — every number below is read back from
+        a registry instrument; the dict shape and values are bit-compatible
+        with the pre-registry implementation (percentiles recomputed from
+        the histogram's raw window with the same numpy calls).
+        """
+        by_kind = {dict(labels)["kind"]: inst.value
+                   for labels, inst in
+                   self.metrics.labelled("server_served_total").items()
+                   if labels}
+        pad = {name: (
+            self.metrics.value("server_pad_rows", path=name, rows="real"),
+            self.metrics.value("server_pad_rows", path=name, rows="padded"))
+            for name in self._pad}
         out = {
-            "served": self._served,
-            "flushes": self._flushes,
-            "coalesced": self._coalesced,
-            "by_kind": dict(self._served_by_kind),
+            "served": self._c_served.value,
+            "flushes": self._c_flushes.value,
+            "coalesced": self._c_coalesced.value,
+            "by_kind": by_kind,
             "pad_overhead": {
                 name: (padded / real - 1.0 if real else 0.0)
-                for name, (real, padded) in self._pad.items()},
+                for name, (real, padded) in pad.items()},
         }
-        if self._served:
-            lat = np.asarray(self._latencies)
+        if self._c_served.value:
+            lat = self._h_latency.values()
             out["latency_mean_s"] = float(lat.mean())
             out["latency_p95_s"] = float(np.percentile(lat, 95))
-            out["staleness_mean"] = float(np.mean(self._staleness))
+            out["staleness_mean"] = float(np.mean(self._h_staleness.values()))
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         return out

@@ -33,6 +33,7 @@ from ..checkpoint import store
 from ..core.sketches import SketchSet, bloom_membership
 from ..engine.api import (DeviceCarry, EnginePlan, MiningSession,
                           pow2_bucket, resolve_plan)
+from ..obs import accuracy, trace
 from .dynamic_graph import DynamicGraph
 from .maintenance import ErrorBudgetPolicy, SketchMaintainer
 
@@ -62,6 +63,9 @@ class StreamSession:
         self.cards_carried = 0
         self.extra = {}            # restore() fills this from the checkpoint
         self._delta_listeners = []  # serving-tier invalidation subscribers
+        # the session's metric home: the traffic meter's registry, so one
+        # snapshot carries upload accounting plus anything recorded here
+        self.metrics = dyn.traffic.registry
 
     # ------------------------------------------------------------------
     # mutation
@@ -126,42 +130,50 @@ class StreamSession:
         the returned ``bytes_uploaded`` (also in ``stats()["traffic"]``) is
         the exact host → device traffic, proportional to the delta size.
         """
-        old_keys = self.dyn.edge_keys
-        self.dyn.traffic.begin_delta()
-        delta = self.dyn.apply_delta(inserts, deletes)
-        rebuilt = (self.maintainer.apply(delta)
-                   if self.maintainer else np.zeros(0, np.int64))
-        self.version += 1
-        rec = car = 0
-        if not (delta.is_noop and rebuilt.size == 0):
-            self.dyn.traffic.commit_step()   # noop deltas stay unmetered
-            graph = self.dyn.view()
-            # a row rebuilt this delta may have gone dirty at an *earlier*
-            # delta (policy deferral), so invalidation covers touched∪rebuilt
-            invalid = np.union1d(delta.touched, rebuilt)
-            carry = self._device_carry(
-                self.dyn.carry_index(old_keys, invalid),
-                identity=delta.is_noop)    # noop delta ran no edge splice
-            recomputed = self.session.refresh(
-                graph, self.maintainer.sketch if self.maintainer else None,
-                carry)
-            # refresh returns None when it dropped the cache (nothing
-            # carried; the full pass happens lazily) — not counted as savings
-            rec = 0 if recomputed is None else recomputed
-            car = 0 if recomputed is None else max(graph.m - recomputed, 0)
-            self.cards_recomputed += rec
-            self.cards_carried += car
-            self._publish_invalid(invalid)
-        return {
-            "version": self.version,
-            "inserted": int(delta.inserted.shape[0]),
-            "deleted": int(delta.deleted.shape[0]),
-            "touched": int(delta.touched.shape[0]),
-            "rows_rebuilt_now": int(rebuilt.size),
-            "cards_recomputed": rec,
-            "cards_carried": car,
-            "bytes_uploaded": self.dyn.traffic.bytes_delta,
-        }
+        with trace.span("stream.apply_delta") as sp:
+            old_keys = self.dyn.edge_keys
+            self.dyn.traffic.begin_delta()
+            delta = self.dyn.apply_delta(inserts, deletes)
+            rebuilt = (self.maintainer.apply(delta)
+                       if self.maintainer else np.zeros(0, np.int64))
+            self.version += 1
+            rec = car = 0
+            if not (delta.is_noop and rebuilt.size == 0):
+                self.dyn.traffic.commit_step()  # noop deltas stay unmetered
+                graph = self.dyn.view()
+                # a row rebuilt this delta may have gone dirty at an
+                # *earlier* delta (policy deferral), so invalidation covers
+                # touched ∪ rebuilt
+                invalid = np.union1d(delta.touched, rebuilt)
+                carry = self._device_carry(
+                    self.dyn.carry_index(old_keys, invalid),
+                    identity=delta.is_noop)  # noop delta ran no edge splice
+                recomputed = self.session.refresh(
+                    graph,
+                    self.maintainer.sketch if self.maintainer else None,
+                    carry)
+                # refresh returns None when it dropped the cache (nothing
+                # carried; the full pass happens lazily) — no savings counted
+                rec = 0 if recomputed is None else recomputed
+                car = 0 if recomputed is None else max(graph.m - recomputed, 0)
+                self.cards_recomputed += rec
+                self.cards_carried += car
+                self._publish_invalid(invalid)
+            if self.maintainer is not None:
+                accuracy.record_maintenance(self.maintainer.stats(),
+                                            self.metrics)
+            info = {
+                "version": self.version,
+                "inserted": int(delta.inserted.shape[0]),
+                "deleted": int(delta.deleted.shape[0]),
+                "touched": int(delta.touched.shape[0]),
+                "rows_rebuilt_now": int(rebuilt.size),
+                "cards_recomputed": rec,
+                "cards_carried": car,
+                "bytes_uploaded": self.dyn.traffic.bytes_delta,
+            }
+            sp.set(**info)
+            return info
 
     def flush(self) -> int:
         """Force-rebuild all dirty sketch rows and refresh their edges —
@@ -169,18 +181,21 @@ class StreamSession:
         lazy error-budget policy."""
         if self.maintainer is None or not self.maintainer.dirty.any():
             return 0       # nothing to rebuild: not a metered traffic step
-        self.dyn.traffic.begin_delta()
-        self.dyn.traffic.commit_step()
-        rebuilt = self.maintainer.flush()
-        if rebuilt.size:
-            carry = self._device_carry(
-                self.dyn.carry_index(self.dyn.edge_keys, rebuilt),
-                identity=True)             # edge set unchanged by a flush
-            self.session.refresh(self.dyn.view(), self.maintainer.sketch,
-                                 carry)
-            # a rebuild replaces stale sketch rows: cached answers reading
-            # those rows are now wrong, exactly like a delta touching them
-            self._publish_invalid(np.asarray(rebuilt, dtype=np.int64))
+        with trace.span("stream.flush") as sp:
+            self.dyn.traffic.begin_delta()
+            self.dyn.traffic.commit_step()
+            rebuilt = self.maintainer.flush()
+            if rebuilt.size:
+                carry = self._device_carry(
+                    self.dyn.carry_index(self.dyn.edge_keys, rebuilt),
+                    identity=True)           # edge set unchanged by a flush
+                self.session.refresh(self.dyn.view(), self.maintainer.sketch,
+                                     carry)
+                # a rebuild replaces stale sketch rows: cached answers
+                # reading those rows are now wrong, exactly like a delta
+                # touching them
+                self._publish_invalid(np.asarray(rebuilt, dtype=np.int64))
+            sp.set(rows_rebuilt=int(rebuilt.size))
         return int(rebuilt.size)
 
     # ------------------------------------------------------------------
@@ -245,6 +260,10 @@ class StreamSession:
         }
         if self.maintainer is not None:
             out["maintenance"] = self.maintainer.stats()
+            # accuracy telemetry: sketch saturation is the leading indicator
+            # of estimate inflation; recorded here (stats-time, not hot path
+            # — the Bloom fill scan is O(n·bits))
+            accuracy.record_fill(self.maintainer.sketch, self.metrics)
         return out
 
     # ------------------------------------------------------------------

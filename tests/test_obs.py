@@ -1,0 +1,321 @@
+"""Observability layer: tracer, metrics registry, accuracy telemetry,
+stat-facade equivalence, and the bench record schema."""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import sketches as SK
+from repro.obs import accuracy, trace
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.stream.dynamic_graph import TrafficMeter
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def tracing():
+    """Enable the global tracer for one test, restoring the disabled state."""
+    trace.enable()
+    trace.clear()
+    yield
+    trace.disable()
+    trace.clear()
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_records_parent_and_depth(tracing):
+    with trace.span("outer", a=1):
+        with trace.span("inner") as sp:
+            sp.set(b=2)
+    evs = trace.events()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # exit order
+    inner, outer = evs
+    assert inner["parent"] == "outer" and inner["depth"] == 1
+    assert outer["parent"] is None and outer["depth"] == 0
+    assert outer["args"] == {"a": 1}
+    assert inner["args"] == {"b": 2}
+    assert inner["dur"] <= outer["dur"]
+    assert inner["ts"] >= outer["ts"]
+
+
+def test_disabled_tracer_returns_shared_null_span():
+    assert not trace.enabled()
+    s1 = trace.span("x", huge=1)
+    s2 = trace.span("y")
+    assert s1 is s2                      # one shared no-op object
+    with s1 as sp:
+        assert sp.fence(42) == 42        # passthrough, no blocking
+        sp.set(k=1)
+    assert trace.events() == []
+
+
+def test_ring_buffer_drops_oldest():
+    t = trace.Tracer(capacity=4)
+    t.enable()
+    for i in range(10):
+        with t.span(f"s{i}"):
+            pass
+    evs = t.events()
+    assert len(evs) == 4
+    assert [e["name"] for e in evs] == ["s6", "s7", "s8", "s9"]
+    assert t.recorded == 10
+
+
+def test_span_fence_blocks_device_value(tracing):
+    with trace.span("jit") as sp:
+        out = sp.fence(jnp.arange(8) * 2)
+    assert out.sum() == 56
+    assert trace.events()[0]["name"] == "jit"
+
+
+def test_span_records_error_flag(tracing):
+    with pytest.raises(ValueError):
+        with trace.span("boom"):
+            raise ValueError("x")
+    ev = trace.events()[0]
+    assert ev["name"] == "boom" and ev["error"] is True
+
+
+def test_traced_decorator(tracing):
+    @trace.traced("deco.fn", tag=3)
+    def f(x):
+        return x + 1
+
+    assert f(1) == 2
+    ev = trace.events()[0]
+    assert ev["name"] == "deco.fn" and ev["args"] == {"tag": 3}
+
+
+def test_export_chrome_trace_schema(tmp_path, tracing):
+    with trace.span("parent", n=5):
+        with trace.span("child"):
+            pass
+    path = tmp_path / "t.json"
+    doc = trace.export(str(path))
+    ondisk = json.loads(path.read_text())
+    assert ondisk == doc
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["recorded"] == 2
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] == "X" and ev["cat"] == "repro"
+        assert set(ev) >= {"name", "ts", "dur", "pid", "tid", "args"}
+        assert "depth" in ev["args"] and "parent" in ev["args"]
+    child = next(e for e in doc["traceEvents"] if e["name"] == "child")
+    assert child["args"]["parent"] == "parent"
+
+
+def test_aggregate_counts_and_totals(tracing):
+    for _ in range(3):
+        with trace.span("a"):
+            pass
+    with trace.span("b"):
+        pass
+    agg = trace.aggregate()
+    assert agg["a"]["count"] == 3 and agg["b"]["count"] == 1
+    assert agg["a"]["total_s"] >= 0
+    assert agg["a"]["mean_s"] == pytest.approx(agg["a"]["total_s"] / 3)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_instrument_identity_and_values():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", kind="bf")
+    assert reg.counter("hits", kind="bf") is c       # same (name, labels)
+    assert reg.counter("hits", kind="kh") is not c
+    c.inc()
+    c.inc(4)
+    assert reg.value("hits", kind="bf") == 5
+    g = reg.gauge("fill")
+    g.set(0.25)
+    g.add(0.5)
+    assert reg.value("fill") == 0.75
+    assert reg.value("never_created") is None
+
+
+def test_registry_snapshot_flat_names_and_histograms():
+    reg = MetricsRegistry()
+    reg.counter("served", kind="tc").inc(2)
+    reg.gauge("fill").set(0.5)
+    h = reg.histogram("lat", window=8)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["served{kind=tc}"] == 2
+    assert snap["fill"] == 0.5
+    assert snap["lat_count"] == 4
+    assert snap["lat_mean"] == pytest.approx(2.5)
+    assert snap["lat_p95"] == pytest.approx(np.percentile([1, 2, 3, 4], 95))
+    assert snap["lat_max"] == 4.0
+    assert json.loads(json.dumps(snap)) == snap      # JSON-serializable
+
+
+def test_histogram_window_and_labelled_enumeration():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", window=3)
+    for v in range(10):
+        h.observe(float(v))
+    assert h.count == 10
+    np.testing.assert_array_equal(h.values(), [7.0, 8.0, 9.0])
+    reg.counter("served").inc()
+    reg.counter("served", kind="tc").inc(3)
+    by = reg.labelled("served")
+    assert {dict(k).get("kind") for k in by} == {None, "tc"}
+    reg.reset()
+    assert reg.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# accuracy telemetry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["bf", "kh", "1h", "kmv"])
+def test_fill_ratio_in_unit_interval(kind):
+    g = G.kronecker(7, 8, seed=0)
+    sk = SK.build(g, kind, storage_budget=0.5, num_hashes=2, seed=0)
+    r = accuracy.fill_ratio(sk)
+    assert 0.0 < r <= 1.0
+    reg = MetricsRegistry()
+    assert accuracy.record_fill(sk, reg) == r
+    assert reg.value("sketch_fill_ratio", kind=kind) == r
+
+
+@pytest.mark.parametrize("kind", ["bf", "kh"])
+def test_record_pair_error_gauges(kind):
+    g = G.kronecker(7, 8, seed=0)
+    sk = SK.build(g, kind, storage_budget=0.5, num_hashes=2, seed=0)
+    deg = np.asarray(g.deg)
+    e = np.asarray(g.edges)[:32]
+    du, dv = deg[e[:, 0]], deg[e[:, 1]]
+    cards = np.minimum(du, dv).astype(np.float64)
+    reg = MetricsRegistry()
+    out = accuracy.record_pair_error(sk, cards, du, dv, reg)
+    assert out["rmse"] > 0.0 and out["rel"] > 0.0
+    assert reg.value("accuracy_err_rmse", kind=kind) == out["rmse"]
+    assert reg.value("accuracy_err_rel", kind=kind) == out["rel"]
+    # empty batch records nothing and returns zeros
+    assert accuracy.record_pair_error(sk, [], [], [], MetricsRegistry()) == \
+        {"rmse": 0.0, "rel": 0.0}
+
+
+def test_record_maintenance_mirrors_stats():
+    reg = MetricsRegistry()
+    stats = {"kind": "bf", "rows_dirty": 3, "stale_total": 1.5,
+             "rows_rebuilt": 7, "rows_incremental": 20, "deltas_applied": 4}
+    accuracy.record_maintenance(stats, reg)
+    assert reg.value("sketch_rows_dirty", kind="bf") == 3.0
+    assert reg.value("sketch_stale_total", kind="bf") == 1.5
+    assert reg.value("sketch_rows_rebuilt", kind="bf") == 7
+    assert reg.value("sketch_rows_incremental", kind="bf") == 20
+    assert reg.value("sketch_deltas_applied", kind="bf") == 4
+    # set-not-inc: re-recording the same stats must not double
+    accuracy.record_maintenance(stats, reg)
+    assert reg.value("sketch_rows_rebuilt", kind="bf") == 7
+
+
+# ---------------------------------------------------------------------------
+# stat facades as registry views
+# ---------------------------------------------------------------------------
+
+def test_traffic_meter_is_a_registry_view():
+    tm = TrafficMeter()
+    tm.put(np.zeros(100, np.int32), init=True)       # 400 bytes init
+    tm.begin_delta()
+    tm.put(np.zeros(10, np.int32))                   # 40 bytes delta
+    tm.put(np.zeros(5, np.int32))                    # +20
+    tm.commit_step()
+    assert tm.bytes_init == 400
+    assert tm.bytes_delta == 60
+    assert tm.bytes_total == 60
+    assert tm.steps == 1
+    assert tm.stats() == {"bytes_init": 400, "bytes_total": 60,
+                          "bytes_last_delta": 60, "bytes_per_delta_mean": 60.0,
+                          "steps": 1}
+    # the same numbers, straight from the backing registry
+    assert tm.registry.value("traffic_bytes", path="init") == 400
+    assert tm.registry.value("traffic_bytes", path="delta") == 60
+    assert tm.registry.value("traffic_bytes_last_delta") == 60
+    assert tm.registry.value("traffic_steps") == 1
+    tm.begin_delta()
+    assert tm.bytes_delta == 0 and tm.bytes_total == 60
+    # meters do not share registries (concurrent sessions stay isolated)
+    assert TrafficMeter().bytes_init == 0
+
+
+def test_setexpr_compile_cache_counters():
+    from repro.engine import setexpr
+
+    setexpr.cache_clear()
+    hits0 = REGISTRY.counter("setexpr_compile_total", result="hit").value
+    miss0 = REGISTRY.counter("setexpr_compile_total", result="miss").value
+    u, v, w = setexpr.Row(0), setexpr.Row(1), setexpr.Row(2)
+    setexpr.compile_expr((u & v) - w)
+    setexpr.compile_expr((u & v) - w)
+    setexpr.compile_expr((u & v) - w)
+    assert REGISTRY.counter("setexpr_compile_total",
+                            result="miss").value == miss0 + 1
+    assert REGISTRY.counter("setexpr_compile_total",
+                            result="hit").value == hits0 + 2
+
+
+# ---------------------------------------------------------------------------
+# live roofline wiring
+# ---------------------------------------------------------------------------
+
+def test_record_roofline_from_compiled_fn():
+    from repro.analysis import live
+
+    a = jnp.ones((64, 64), jnp.float32)
+    fn = jax.jit(lambda: a @ a).lower().compile()
+    reg = MetricsRegistry()
+    out = live.record_roofline("matmul", fn, wall_s=1e-3, registry=reg)
+    assert out["flops"] > 0
+    assert out["bound_s"] > 0
+    assert out["fraction"] == pytest.approx(out["bound_s"] / 1e-3)
+    assert reg.value("roofline_fraction", op="matmul") == out["fraction"]
+    assert reg.value("roofline_bound_s", op="matmul") == out["bound_s"]
+
+
+# ---------------------------------------------------------------------------
+# bench record schema (benchmarks.common)
+# ---------------------------------------------------------------------------
+
+def test_bench_emit_schema_and_derived_parsing(capsys):
+    from benchmarks import common
+
+    common.reset_records()
+    common.emit("bench_x", 1500.0,
+                "speedup=2.50x;rows=128;label=abc;flag")
+    common.emit("bench_y", 10.0)
+    assert [r["name"] for r in common.RECORDS] == ["bench_x", "bench_y"]
+    rec = common.RECORDS[0]
+    assert set(rec) == {"name", "wall_s", "metrics"}
+    assert rec["wall_s"] == pytest.approx(1.5e-3)
+    assert rec["metrics"] == {"speedup": 2.5, "rows": 128.0,
+                              "label": "abc", "flag": True}
+    assert common.RECORDS[1]["metrics"] == {}
+    assert json.loads(json.dumps(common.RECORDS)) == common.RECORDS
+    common.reset_records()
+    assert common.RECORDS == [] and common.ROWS == []
+    out = capsys.readouterr().out
+    assert "bench_x,1500.0,speedup=2.50x;rows=128;label=abc;flag" in out
+
+
+def test_dress_rehearsal_marks_warmup_span(tracing):
+    from benchmarks import common
+
+    out = common.dress_rehearsal(lambda: jnp.arange(4).sum())
+    assert int(out) == 6
+    names = [e["name"] for e in trace.events()]
+    assert "bench.warmup" in names

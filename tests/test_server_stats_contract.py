@@ -1,0 +1,105 @@
+"""server.stats() field semantics, asserted through the MetricsRegistry view.
+
+The stats dict is a *view* over ``server.metrics`` instruments; these tests
+pin the contract of each field — per-kind pad_overhead, the coalesced
+counter, latency/staleness percentile omission until something was served —
+and that every number agrees with the backing registry instrument.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.stream import BatchedQueryServer, DynamicGraph, StreamSession
+
+
+@pytest.fixture(scope="module")
+def session():
+    g = G.kronecker(7, 8, seed=5)
+    return StreamSession(DynamicGraph.from_edges(g.n, np.asarray(g.edges)),
+                         kind="bf", storage_budget=0.5)
+
+
+def _pairs(n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n, size=(k, 2)).astype(np.int32)
+
+
+def test_percentiles_omitted_until_served(session):
+    srv = BatchedQueryServer(session, cache=False)
+    s0 = srv.stats()
+    assert s0["served"] == 0 and s0["flushes"] == 0
+    for key in ("latency_mean_s", "latency_p95_s", "staleness_mean"):
+        assert key not in s0
+    srv.submit_similarity(_pairs(session.dyn.n, 4), "jaccard")
+    srv.flush()
+    s1 = srv.stats()
+    assert s1["served"] == 1 and s1["flushes"] == 1
+    assert s1["latency_mean_s"] > 0.0
+    assert s1["latency_p95_s"] >= 0.0
+    assert s1["staleness_mean"] == 0.0
+    # ...and each comes from the registry histogram's raw window
+    lat = srv.metrics.histogram("server_latency_s").values()
+    assert s1["latency_mean_s"] == float(lat.mean())
+    assert s1["latency_p95_s"] == float(np.percentile(lat, 95))
+
+
+def test_pad_overhead_per_kind_from_registry(session):
+    srv = BatchedQueryServer(session, cache=False)
+    n = session.dyn.n
+    srv.submit_similarity(_pairs(n, 3), "jaccard")     # pairs path
+    srv.submit_membership(1, np.arange(5, dtype=np.int32))  # membership path
+    srv.submit_local_cluster(2, alpha=0.15, eps=1e-2)  # localcluster path
+    srv.flush()
+    st = srv.stats()
+    assert set(st["pad_overhead"]) == {"pairs", "membership", "localcluster"}
+    for name, (real, padded) in srv._pad.items():
+        # registry counters mirror the per-path [real, padded] tallies
+        assert srv.metrics.value("server_pad_rows", path=name,
+                                 rows="real") == real
+        assert srv.metrics.value("server_pad_rows", path=name,
+                                 rows="padded") == padded
+        expect = padded / real - 1.0 if real else 0.0
+        assert st["pad_overhead"][name] == pytest.approx(expect)
+    # real rows ran: padding can only add, never shrink
+    assert srv._pad["pairs"][1] >= srv._pad["pairs"][0] > 0
+    assert srv._pad["localcluster"][1] >= srv._pad["localcluster"][0] == 1
+    assert st["pad_overhead"]["localcluster"] > 0.0   # pow2-padded singleton
+
+
+def test_coalesced_counter_counts_deduped_requests(session):
+    srv = BatchedQueryServer(session, cache=False)
+    p = _pairs(session.dyn.n, 4, seed=3)
+    r1 = srv.submit_similarity(p, "jaccard")
+    r2 = srv.submit_similarity(p, "jaccard")          # identical -> coalesces
+    r3 = srv.submit_triangle_count()
+    out = srv.flush()
+    st = srv.stats()
+    assert st["served"] == 3                          # every request answered
+    assert st["coalesced"] == 1                       # but one key deduped
+    assert st["coalesced"] == srv.metrics.value("server_coalesced_total")
+    np.testing.assert_array_equal(np.asarray(out[r1].value),
+                                  np.asarray(out[r2].value))
+    assert out[r3].value > 0
+
+
+def test_by_kind_and_counters_are_registry_views(session):
+    srv = BatchedQueryServer(session, cache=False)
+    n = session.dyn.n
+    srv.submit_similarity(_pairs(n, 4), "jaccard")
+    srv.submit_membership(0, np.arange(4, dtype=np.int32))
+    srv.submit_link_prediction(1, top_k=2)
+    srv.flush()
+    srv.submit_triangle_count()
+    srv.flush()
+    st = srv.stats()
+    assert st["by_kind"] == {"similarity": 1, "membership": 1,
+                             "linkpred": 1, "tc": 1}
+    assert sum(st["by_kind"].values()) == st["served"] == 4
+    assert st["flushes"] == 2
+    # the same numbers straight from the instruments the view reads
+    assert st["served"] == srv.metrics.value("server_served_total")
+    assert st["flushes"] == srv.metrics.value("server_flushes_total")
+    for kind, count in st["by_kind"].items():
+        assert srv.metrics.value("server_served_total", kind=kind) == count
+    # servers own their registries: a fresh one starts from zero
+    assert BatchedQueryServer(session, cache=False).stats()["served"] == 0

@@ -1,0 +1,143 @@
+"""Acceptance: one traced ``launch.stream`` replay exports a Perfetto-loadable
+Chrome trace whose span tree covers every hot seam.
+
+Runs the real CLI ``main()`` in-process with ``--trace`` (and ``--metrics``),
+parses the exported JSON, and asserts the trace-event schema plus the
+required span names and their nesting — delta apply, sketch maintenance,
+cache lookup/evict, batch flush, kernel execute — and that every
+``server.flush`` span carries its cache/coalesce provenance (architecture
+invariant 8).
+"""
+import json
+import sys
+
+import pytest
+
+from repro.launch import stream as launch_stream
+from repro.obs import trace
+
+REQUIRED_SPANS = {
+    # delta apply
+    "stream.apply_delta", "graph.apply_delta", "graph.device_delta",
+    # sketch maintenance
+    "sketch.insert",
+    # cache lookup / evict
+    "cache.lookup", "cache.invalidate",
+    # batch flush
+    "server.flush",
+    # kernel execute
+    "engine.pair_cards",
+}
+
+
+@pytest.fixture(scope="module")
+def replay(tmp_path_factory):
+    """One tiny traced replay; returns (trace doc, summary dict)."""
+    path = tmp_path_factory.mktemp("trace") / "out.json"
+    argv = ["stream", "--scale", "8", "--batches", "2", "--queries", "8",
+            "--seed", "1", "--trace", str(path), "--metrics"]
+    old_argv, old_stdout = sys.argv, sys.stdout
+    import io
+    sys.argv = argv
+    sys.stdout = io.StringIO()
+    try:
+        launch_stream.main()
+        printed = sys.stdout.getvalue()
+    finally:
+        sys.argv = old_argv
+        sys.stdout = old_stdout
+        trace.disable()
+        trace.clear()
+    summary = json.loads(printed.strip().splitlines()[-1])
+    return json.loads(path.read_text()), summary
+
+
+def test_chrome_trace_schema(replay):
+    doc, _ = replay
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert len(evs) > 0
+    for ev in evs:
+        assert ev["ph"] == "X" and ev["cat"] == "repro"
+        assert isinstance(ev["name"], str)
+        assert ev["dur"] >= 0.0 and ev["ts"] >= 0.0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        assert "parent" in ev["args"] and "depth" in ev["args"]
+
+
+def test_required_spans_cover_hot_seams(replay):
+    doc, _ = replay
+    names = {e["name"] for e in doc["traceEvents"]}
+    missing = REQUIRED_SPANS - names
+    assert not missing, f"replay trace missing spans: {sorted(missing)}"
+
+
+def test_span_tree_nesting(replay):
+    doc, _ = replay
+    # expected (child -> parent) edges of the span tree; args carry the
+    # recorded parent, so no timestamp-containment heuristics needed
+    expected = {
+        "graph.apply_delta": "stream.apply_delta",
+        "graph.device_delta": "graph.apply_delta",
+        "graph.scatter_rows": "graph.device_delta",
+        "graph.splice_edges": "graph.device_delta",
+        "sketch.insert": "stream.apply_delta",
+        "engine.refresh": "stream.apply_delta",
+        "cache.invalidate": "stream.apply_delta",
+        "cache.lookup": "server.flush",
+        "server.pair_batch": "server.flush",
+        "engine.pair_cards": "server.pair_batch",
+        "server.localcluster_batch": "server.flush",
+    }
+    for ev in doc["traceEvents"]:
+        want = expected.get(ev["name"])
+        if want is not None:
+            assert ev["args"]["parent"] == want, ev["name"]
+            assert ev["args"]["depth"] >= 1
+    roots = [e for e in doc["traceEvents"]
+             if e["name"] in ("stream.apply_delta", "server.flush")]
+    assert roots and all(e["args"]["depth"] == 0 for e in roots)
+
+
+def test_flush_spans_carry_provenance(replay):
+    doc, _ = replay
+    flushes = [e for e in doc["traceEvents"] if e["name"] == "server.flush"]
+    assert len(flushes) >= 2                     # one per replayed batch
+    for ev in flushes:
+        args = ev["args"]
+        assert args["requests"] == 5             # the per-batch query mix
+        assert args["unique_keys"] + args["coalesced"] == args["requests"]
+        assert 0 <= args["cache_hits"] <= args["unique_keys"]
+        assert args["version"] >= 1
+    batches = [e for e in doc["traceEvents"]
+               if e["name"] in ("server.pair_batch",
+                                "server.localcluster_batch")]
+    assert batches
+    for ev in batches:
+        real = ev["args"].get("pairs", ev["args"].get("seeds"))
+        assert ev["args"]["padded"] >= real > 0  # pad provenance
+
+
+def test_deltas_carry_maintenance_attrs(replay):
+    doc, _ = replay
+    deltas = [e for e in doc["traceEvents"]
+              if e["name"] == "stream.apply_delta"]
+    assert len(deltas) == 2
+    for ev in deltas:
+        args = ev["args"]
+        assert args["inserted"] > 0
+        assert args["bytes_uploaded"] > 0
+        assert args["cards_recomputed"] + args["cards_carried"] > 0
+
+
+def test_summary_embeds_metrics_and_trace_path(replay):
+    doc, summary = replay
+    assert summary["event"] == "stream_replay"
+    assert summary["trace"].endswith("out.json")
+    snaps = summary["metrics"]
+    assert set(snaps) == {"global", "stream", "server"}
+    assert snaps["server"]["server_flushes_total"] == 2
+    assert snaps["stream"]["traffic_steps"] == 2
+    assert snaps["stream"]["sketch_fill_ratio{kind=bf}"] > 0.0
+    assert snaps["server"]["accuracy_err_rmse{kind=bf}"] > 0.0
+    assert any(k.startswith("setexpr_compile_total") for k in snaps["global"])
