@@ -11,6 +11,13 @@ throughput, the cache's eviction breakdown, and (the point of the exercise)
 the mean-latency improvement; it also asserts the two replays' answers are
 bit-identical, because a cache that changes answers is not a cache.
 
+A second, multi-tenant phase replays the same universe with requests
+rotating through tenants carrying SLO deadlines (gold/silver/bronze),
+synchronously and then with ``async_flush`` + a concurrent delta driver
+thread. It reports per-tenant p50/p95/p99, deadline misses, and the
+wall-clock overlap win snapshot-isolated serving buys; ``--check-p99``
+gates the async tail against the synchronous one in nightly CI.
+
   PYTHONPATH=src python -m benchmarks.serving --smoke --json BENCH_serving.json
 
 The last line printed is a machine-readable JSON summary (written to
@@ -21,6 +28,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import threading
 import time
 
 import numpy as np
@@ -35,6 +43,10 @@ from .common import dress_rehearsal, emit
 # tc is the rare whole-graph dashboard query that no delta lets survive
 _KIND_WEIGHTS = (("similarity", 0.50), ("membership", 0.22),
                  ("linkpred", 0.15), ("localcluster", 0.10), ("tc", 0.03))
+
+# multi-tenant mix: (name, SLO deadline in seconds) — gold is latency-
+# sensitive, bronze is best-effort batch traffic with no deadline
+_TENANTS = (("gold", 0.25), ("silver", 1.0), ("bronze", None))
 
 
 def build_population(n: int, distinct: int, pairs_per_req: int, seed: int):
@@ -79,17 +91,21 @@ def zipf_ranks(distinct: int, s: float, total: int, seed: int) -> np.ndarray:
     return rng.choice(distinct, size=total, p=p / p.sum())
 
 
-def _submit(server: BatchedQueryServer, kind: str, payload: dict) -> int:
+def _submit(server: BatchedQueryServer, kind: str, payload: dict,
+            **submit_kw) -> int:
     if kind == "similarity":
-        return server.submit_similarity(payload["pairs"], payload["measure"])
+        return server.submit_similarity(payload["pairs"], payload["measure"],
+                                        **submit_kw)
     if kind == "membership":
-        return server.submit_membership(payload["u"], payload["candidates"])
+        return server.submit_membership(payload["u"], payload["candidates"],
+                                        **submit_kw)
     if kind == "linkpred":
-        return server.submit_link_prediction(payload["u"], payload["top_k"])
+        return server.submit_link_prediction(payload["u"], payload["top_k"],
+                                             **submit_kw)
     if kind == "localcluster":
         return server.submit_local_cluster(payload["seed"], payload["alpha"],
-                                           payload["eps"])
-    return server.submit_triangle_count()
+                                           payload["eps"], **submit_kw)
+    return server.submit_triangle_count(**submit_kw)
 
 
 def _fresh_session(scale: int, edge_factor: int, budget: float, seed: int,
@@ -134,6 +150,110 @@ def replay(st: StreamSession, arrivals: np.ndarray, population, ranks,
     return results, wall, stats
 
 
+def multi_tenant_replay(st: StreamSession, arrivals: np.ndarray, population,
+                        ranks, async_mode: bool, delta_every: int,
+                        delta_edges: int, min_batch: int, flush_every: int,
+                        pace_s: float = 0.0005):
+    """One multi-tenant pass over the Zipf stream with interleaved deltas.
+
+    Requests rotate through :data:`_TENANTS` (tenant + SLO deadline on every
+    submit). With ``async_mode`` the deltas run on a separate driver thread
+    while the server's background worker flushes — the overlap the
+    double-buffered serving views make safe; without it, deltas and flushes
+    serialize on the submitting thread at the same stream positions.
+
+    Submits follow an *open-loop* schedule (request ``i`` is released at
+    ``t0 + i * pace_s``, never early, with no catch-up sleep when behind):
+    latency is measured against an arrival process the server does not
+    control, so a backlog shows up as tail latency instead of silently
+    stretching the arrival times. Returns
+    ``(results_by_rid, wall_s, server_stats, delta_ms_max)`` where the
+    last is the largest inline ``apply_delta`` wall time (0.0 in async
+    mode — the driver thread owns the deltas there).
+    """
+    server = BatchedQueryServer(st, min_batch=min_batch, cache=True,
+                                max_batch=flush_every, max_wait_s=0.05,
+                                async_flush=async_mode)
+    chunks = []
+    if delta_every:
+        next_delta = 0
+        for _ in range(len(ranks) // delta_every):
+            take = min(delta_edges, arrivals.shape[0])
+            chunks.append(arrivals[next_delta:next_delta + take]
+                          if next_delta + take <= arrivals.shape[0]
+                          else arrivals[-take:])
+            next_delta += take
+    stop = threading.Event()
+
+    driver = None
+    results = {}
+    t0 = time.perf_counter()
+
+    def _drive():
+        # same stream positions as the sync replay: chunk ci lands where
+        # request ci*delta_every sits on the arrival schedule — back-to-back
+        # chunks would stack stalls the sync baseline never pays
+        for ci, chunk in enumerate(chunks):
+            if stop.is_set():
+                break
+            gap = t0 + ci * delta_every * pace_s - time.perf_counter()
+            if gap > 0:
+                time.sleep(gap)
+            st.apply_delta(chunk)
+
+    if async_mode and chunks:
+        driver = threading.Thread(target=_drive, daemon=True)
+        driver.start()
+    ci = 0
+    delta_times = []
+    for i, rank in enumerate(ranks):
+        if not async_mode and delta_every and i % delta_every == 0 \
+                and ci < len(chunks):
+            td = time.perf_counter()
+            st.apply_delta(chunks[ci])
+            delta_times.append(time.perf_counter() - td)
+            ci += 1
+        gap = t0 + i * pace_s - time.perf_counter()
+        if gap > 0:
+            time.sleep(gap)
+        tenant, deadline = _TENANTS[i % len(_TENANTS)]
+        kind, payload = population[rank]
+        _submit(server, kind, payload, tenant=tenant, deadline_s=deadline)
+        results.update(server.poll())
+    results.update(server.flush())
+    while len(results) < len(ranks):        # worker may still be flushing
+        time.sleep(0.001)
+        results.update(server.drain())
+    wall = time.perf_counter() - t0
+    stop.set()
+    if driver is not None:
+        driver.join()
+    stats = server.stats()
+    server.close()
+    delta_ms = float(np.max(delta_times) * 1e3) if delta_times else 0.0
+    return results, wall, stats, delta_ms
+
+
+def _per_tenant(results) -> dict:
+    """p50/p95/p99 latency + deadline misses, grouped by ``result.tenant``."""
+    out = {}
+    for tenant, _ in _TENANTS:
+        lats = np.asarray([r.latency_s for r in results.values()
+                           if r.tenant == tenant])
+        if not lats.size:
+            continue
+        out[tenant] = {
+            "requests": int(lats.size),
+            "p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p95_ms": float(np.percentile(lats, 95) * 1e3),
+            "p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "deadline_missed": int(sum(r.deadline_missed
+                                       for r in results.values()
+                                       if r.tenant == tenant)),
+        }
+    return out
+
+
 def _values_equal(a, b) -> bool:
     if isinstance(a, dict):
         return set(a) == set(b) and all(_values_equal(a[k], b[k]) for k in a)
@@ -147,7 +267,7 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         delta_edges: int = 16, min_batch: int = 16, flush_every: int = 2,
         budget: float = 0.5, seed: int = 3, json_path=None,
         check_speedup: float = 0.0, trace_json=None,
-        check_trace_overhead: float = 0.0) -> dict:
+        check_trace_overhead: float = 0.0, check_p99: float = 0.0) -> dict:
     """One full cache-off vs cache-on replay; returns the summary dict."""
     st0, _ = _fresh_session(scale, edge_factor, budget, seed, 0.2)
     n = st0.dyn.n
@@ -198,6 +318,19 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         if not was_enabled:
             trace.disable()
         trace_overhead = float(lat_t.mean() / max(on[3].mean(), 1e-12) - 1.0)
+    # multi-tenant phase: the same Zipf universe, requests rotating through
+    # tenants with SLO deadlines, replayed sync (deltas inline on the
+    # submitting thread) then async (delta driver thread + background flush
+    # worker over snapshot-isolated views) — the wall-clock ratio is the
+    # delta/query overlap win
+    mt = {}
+    for async_mode in (False, True):
+        st, arrivals = _fresh_session(scale, edge_factor, budget, seed, 0.2)
+        mt[async_mode] = multi_tenant_replay(
+            st, arrivals, population, ranks, async_mode, delta_every,
+            delta_edges, min_batch, flush_every)
+    overlap_win = mt[False][1] / max(mt[True][1], 1e-12)
+
     mismatch = sum(
         not _values_equal(off[0][i].value, on[0][i].value)
         for i in range(len(ranks)))
@@ -221,6 +354,15 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
         "throughput_qps_on": float(len(ranks) / on[1]),
         "answers_bit_identical": mismatch == 0,
         "mismatches": mismatch,
+        "multi_tenant": {
+            "tenants_sync": _per_tenant(mt[False][0]),
+            "tenants_async": _per_tenant(mt[True][0]),
+            "wall_s_sync": float(mt[False][1]),
+            "wall_s_async": float(mt[True][1]),
+            "overlap_win": float(overlap_win),
+            "shed": mt[True][2].get("shed", 0),
+            "delta_ms_max_sync": round(mt[False][3], 3),
+        },
     }
     if trace_overhead is not None:
         summary["trace_overhead_mean"] = round(trace_overhead, 4)
@@ -231,6 +373,12 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
          f"speedup_mean={summary['speedup_mean']:.1f}x;"
          f"p95_on_us={summary['p95_latency_s_on'] * 1e6:.0f};"
          f"qps_on={summary['throughput_qps_on']:.0f}")
+    gold = summary["multi_tenant"]["tenants_async"].get("gold", {})
+    emit(f"serving_multitenant_s{scale}", mt[True][1] * 1e6,
+         f"overlap_win={overlap_win:.2f}x;"
+         f"gold_p99_ms={gold.get('p99_ms', 0.0):.1f};"
+         f"deadline_missed={gold.get('deadline_missed', 0)};"
+         f"shed={summary['multi_tenant']['shed']}")
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(summary, fh, indent=2)
@@ -250,6 +398,28 @@ def run(scale: int = 10, edge_factor: int = 8, distinct: int = 128,
             f"tracing-enabled mean-latency overhead "
             f"{trace_overhead * 100:.1f}% > allowed "
             f"{check_trace_overhead:.1f}%")
+    if check_p99:
+        # async serving must not blow up the per-tenant tail. The sync
+        # baseline applies deltas *between* submits, so its p99 excludes
+        # delta time entirely, while an async request can legitimately land
+        # behind one in-flight delta — the unit of acceptable async tail is
+        # therefore one delta stall, and the bound's denominator is
+        # max(sync p99, largest inline delta time, 1ms): the gate catches
+        # the unbounded-backlog pathology (p99 ~ wall, every answer at the
+        # final drain), not the inherent single-delta overlap
+        delta_ms = summary["multi_tenant"]["delta_ms_max_sync"]
+        for tenant, sync_row in \
+                summary["multi_tenant"]["tenants_sync"].items():
+            async_row = summary["multi_tenant"]["tenants_async"].get(tenant)
+            if async_row is None:
+                continue
+            base = max(sync_row["p99_ms"], delta_ms, 1.0)
+            bound = check_p99 * base
+            if async_row["p99_ms"] > bound:
+                raise RuntimeError(
+                    f"tenant {tenant!r} async p99 {async_row['p99_ms']:.1f}ms"
+                    f" > {check_p99:.1f}x max(sync p99, delta stall) "
+                    f"{base:.1f}ms")
     return summary
 
 
@@ -273,6 +443,10 @@ def main() -> None:
                     help="exit nonzero if the traced replay's mean latency "
                          "exceeds the untraced one by more than this many "
                          "percent (0 disables; implies the traced replay)")
+    ap.add_argument("--check-p99", type=float, default=0.0,
+                    help="exit nonzero if any tenant's async-serving p99 "
+                         "latency exceeds this multiple of its synchronous "
+                         "replay p99 (0 disables)")
     args = ap.parse_args()
     kw = {}
     if args.smoke:
@@ -286,7 +460,8 @@ def main() -> None:
     try:
         run(zipf_s=args.zipf, json_path=args.json,
             check_speedup=args.check_speedup, trace_json=args.trace_json,
-            check_trace_overhead=args.check_trace_overhead, **kw)
+            check_trace_overhead=args.check_trace_overhead,
+            check_p99=args.check_p99, **kw)
     except RuntimeError as exc:
         print(f"# FAIL: {exc}")
         sys.exit(1)

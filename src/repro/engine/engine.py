@@ -327,6 +327,19 @@ class MiningSession:
         self.plan = plan
         self._edge_cards: Optional[jax.Array] = None
 
+    def fork(self) -> "MiningSession":
+        """Copy-on-write twin sharing this session's state by reference.
+
+        Every field a session mutates (``graph``, ``sketch``,
+        ``_edge_cards``) is only ever *rebound*, never edited in place, so a
+        fork plus :meth:`refresh` builds the next version's session while
+        the original keeps serving the old one untouched — the
+        snapshot-isolation seam ``StreamSession`` publishes through.
+        """
+        new = MiningSession(self.graph, self.sketch, self.plan)
+        new._edge_cards = self._edge_cards
+        return new
+
     def edge_cardinalities(self) -> jax.Array:
         """Cached |N_u ∩ N_v| over graph.edges (the shared mining pass)."""
         if self._edge_cards is None:

@@ -74,7 +74,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh_name = "2x16x16" if multi_pod else "16x16"
     chips = 512 if multi_pod else 256
     optimizer = make_optimizer(arch)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     with SH.use_rules(mesh, rule_overrides):
         if shape.kind == "decode":
@@ -106,9 +106,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                              out_shardings=(s_shard, None))
             lowered = jitted.lower(s_sds, b_sds)
 
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -177,7 +177,7 @@ def main():
                 cfg_over, rule_over = (OPT_PROFILES.get(arch, (None, None))
                                        if args.opt else (None, None))
                 try:
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     r = run_cell(arch, shape_name, multi, tag=args.tag,
                                  cfg_overrides=cfg_over,
                                  rule_overrides=rule_over)
@@ -188,7 +188,7 @@ def main():
                           f"{roof['memory_s']:.3f}/{roof['collective_s']:.3f})s "
                           f"bottleneck={roof['bottleneck']} "
                           f"useful={roof['useful_ratio']:.2f} "
-                          f"({time.time()-t0:.0f}s)")
+                          f"({time.perf_counter()-t0:.0f}s)")
                 except Exception as e:  # noqa: BLE001
                     failures.append((label, repr(e)))
                     print(f"[FAIL] {label}: {e!r}")

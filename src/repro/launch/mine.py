@@ -106,14 +106,14 @@ def mine(graph: G.Graph, mesh: Optional[Mesh] = None, storage_budget: float = 0.
         ndev = len(jax.devices())
         mesh = jax.make_mesh((ndev,), ("data",))
     words = SK.bloom_words_for_budget(graph.n, graph.m, storage_budget)
-    t0 = time.time()
+    t0 = time.perf_counter()
     bloom = build_sketches_distributed(graph, mesh, words, num_hashes, seed)
     bloom.block_until_ready()
-    t_build = time.time() - t0
-    t0 = time.time()
+    t_build = time.perf_counter() - t0
+    t0 = time.perf_counter()
     tc = triangle_count_distributed(graph, bloom, mesh, num_hashes)
     tc = float(tc)
-    t_mine = time.time() - t0
+    t_mine = time.perf_counter() - t0
     return {"tc_estimate": tc, "build_s": t_build, "mine_s": t_mine,
             "words": words, "devices": int(np.prod(list(mesh.shape.values())))}
 
@@ -126,11 +126,11 @@ def mine_session(graph: G.Graph, algos: list[str], storage_budget: float = 0.25,
     pass; 4-clique and local clustering reuse the same sketch. Returns
     {algo: (value, seconds)}.
     """
-    t0 = time.time()
+    t0 = time.perf_counter()
     sess = ENG.session(graph, "bf", storage_budget=storage_budget,
                        num_hashes=num_hashes, seed=seed, use_kernel=use_kernel)
     jax.block_until_ready(sess.sketch.data)
-    results = {"build": (sess.stats()["sketch_bytes"], time.time() - t0)}
+    results = {"build": (sess.stats()["sketch_bytes"], time.perf_counter() - t0)}
 
     def run_localcluster():
         # deterministic 8-seed batch; report the mean best conductance of
@@ -153,8 +153,8 @@ def mine_session(graph: G.Graph, algos: list[str], storage_budget: float = 0.25,
     for name in algos:
         if name not in runners:
             raise SystemExit(f"unknown algo {name!r}; pick from {sorted(runners)}")
-        t0 = time.time()
-        results[name] = (runners[name](), time.time() - t0)
+        t0 = time.perf_counter()
+        results[name] = (runners[name](), time.perf_counter() - t0)
     return results
 
 
@@ -211,9 +211,9 @@ def main():
           f"mine={out['mine_s']:.2f}s devices={out['devices']}")
     if args.exact:
         from repro.core import exact as X
-        t0 = time.time()
+        t0 = time.perf_counter()
         tc = int(X.exact_triangle_count(g))
-        print(f"TC_exact={tc} ({time.time()-t0:.2f}s) "
+        print(f"TC_exact={tc} ({time.perf_counter()-t0:.2f}s) "
               f"rel_err={abs(out['tc_estimate']-tc)/max(tc,1):.3f}")
     _emit_obs(args)
 

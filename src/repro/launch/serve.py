@@ -82,9 +82,9 @@ def main():
     sc = ServeConfig(arch=args.arch, batch=args.batch)
     server = BatchedServer(sc)
     prompts = [[1, 2, 3], [4, 5], [6], [7, 8, 9, 10]][: args.batch]
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = server.generate(prompts, args.tokens)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.tokens / dt:.1f} tok/s)")
     print(out[:, :16])

@@ -99,6 +99,9 @@ def main():
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the serving-tier result cache")
+    ap.add_argument("--async-serving", action="store_true",
+                    help="run the server's background flush worker: deltas "
+                         "overlap query service on snapshot-isolated views")
     ap.add_argument("--verify", action="store_true",
                     help="check answers against a from-scratch static session")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -143,7 +146,8 @@ def main():
     # fifth submit (max_batch) — no hand-rolled flush loop; max_wait_s keeps
     # a straggler batch from waiting forever under other traffic shapes
     server = BatchedQueryServer(st, max_batch=5, max_wait_s=0.25,
-                                cache=not args.no_cache)
+                                cache=not args.no_cache,
+                                async_flush=args.async_serving)
     chunks = np.array_split(arrivals, args.batches)
     print(f"stream: n={n} initial_m={st.dyn.m} arrivals={arrivals.shape[0]} "
           f"batches={args.batches} kind={args.kind}")
@@ -198,9 +202,11 @@ def main():
             path = st.save(args.checkpoint_dir, extra=stream_cfg)
             print(f"      checkpoint -> {path}")
 
+    server_stats = server.stats()   # before close(), which drops the cache
+    server.close()                  # flush-then-detach
     summary = {"event": "stream_replay", "n": n, "final_m": st.dyn.m,
                "batches": len(batch_rows), "stream": st.stats(),
-               "server": server.stats(),
+               "server": server_stats,
                # null (not a vacuous true) when no batch was verified
                "verify_all_exact": all(r["verify"]["exact_match"]
                                        for r in batch_rows)

@@ -122,11 +122,11 @@ def train(run: TrainRunConfig, fault: Optional[FaultInjector] = None,
             for step in range(start, run.steps):
                 if fault is not None:
                     fault.maybe_fail(step)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 batch = jax.tree.map(jax.numpy.asarray, data.batch(step, run.global_batch))
                 state, metrics = step_fn(state, batch)
                 loss = float(metrics["loss"])
-                monitor.record(step, time.time() - t0)
+                monitor.record(step, time.perf_counter() - t0)
                 history.append({"step": step, "loss": loss})
                 if on_metrics:
                     on_metrics(step, metrics)

@@ -38,21 +38,30 @@ def _flat_name(key: LabelKey) -> str:
 
 
 class Counter:
-    """Monotonic (but resettable) integer counter."""
+    """Monotonic (but resettable) integer counter.
 
-    __slots__ = ("_value",)
+    Mutations hold a per-instrument lock: ``self._value += amount`` is a
+    read-modify-write spanning several bytecodes, so unlocked concurrent
+    increments lose updates (the background flush worker and the delta
+    thread both hit serving counters).
+    """
+
+    __slots__ = ("_value", "_lock")
 
     def __init__(self):
         self._value = 0
+        self._lock = threading.Lock()
 
     def inc(self, amount: int = 1) -> int:
         """Add ``amount`` (default 1); returns the new value."""
-        self._value += amount
-        return self._value
+        with self._lock:
+            self._value += amount
+            return self._value
 
     def set(self, value: int) -> None:
         """Overwrite the count (checkpoint restore / view-backed attrs)."""
-        self._value = int(value)
+        with self._lock:
+            self._value = int(value)
 
     @property
     def value(self) -> int:
@@ -61,22 +70,25 @@ class Counter:
 
 
 class Gauge:
-    """Last-write-wins scalar."""
+    """Last-write-wins scalar (``add`` is locked: it is a read-modify-write)."""
 
-    __slots__ = ("_value",)
+    __slots__ = ("_value", "_lock")
 
     def __init__(self):
         self._value = 0.0
+        self._lock = threading.Lock()
 
     def set(self, value: float) -> float:
         """Record the latest value; returns it."""
-        self._value = value
+        with self._lock:
+            self._value = value
         return value
 
     def add(self, amount: float) -> float:
         """Adjust the gauge by ``amount``; returns the new value."""
-        self._value += amount
-        return self._value
+        with self._lock:
+            self._value += amount
+            return self._value
 
     @property
     def value(self) -> float:
@@ -93,20 +105,28 @@ class Histogram:
     with the pre-registry implementation.
     """
 
-    __slots__ = ("_window", "count")
+    __slots__ = ("_window", "count", "_lock")
 
     def __init__(self, window: Optional[int] = 4096):
         self._window = collections.deque(maxlen=window)
         self.count = 0
+        self._lock = threading.Lock()
 
     def observe(self, value: float) -> None:
-        """Record one observation."""
-        self._window.append(float(value))
-        self.count += 1
+        """Record one observation (locked: ``count += 1`` is a
+        read-modify-write, and deque mutation must not race readers)."""
+        with self._lock:
+            self._window.append(float(value))
+            self.count += 1
 
     def values(self) -> np.ndarray:
-        """The retained window as a float64 array (oldest first)."""
-        return np.asarray(self._window, dtype=np.float64)
+        """The retained window as a float64 array (oldest first).
+
+        Locked against :meth:`observe`: iterating a deque while another
+        thread appends past ``maxlen`` raises ``RuntimeError``.
+        """
+        with self._lock:
+            return np.asarray(self._window, dtype=np.float64)
 
     def summary(self) -> dict:
         """``{"count", "mean", "p50", "p95", "max"}`` over the window."""
@@ -131,11 +151,14 @@ class MetricsRegistry:
         self._metrics: Dict[LabelKey, object] = {}
 
     def _get(self, name: str, labels: dict, factory):
+        # fully locked — an unlocked fast path over the dict could observe
+        # another thread's registration mid-flight; fetch-or-create is cheap
+        # enough that call sites which care hold the instrument instead
         key = _key(name, labels)
-        inst = self._metrics.get(key)
-        if inst is None:
-            with self._lock:
-                inst = self._metrics.setdefault(key, factory())
+        with self._lock:
+            inst = self._metrics.get(key)
+            if inst is None:
+                inst = self._metrics[key] = factory()
         return inst
 
     def counter(self, name: str, **labels) -> Counter:
@@ -156,7 +179,8 @@ class MetricsRegistry:
 
     def value(self, name: str, **labels):
         """Current value of a counter/gauge (None if never created)."""
-        inst = self._metrics.get(_key(name, labels))
+        with self._lock:
+            inst = self._metrics.get(_key(name, labels))
         return None if inst is None else inst.value
 
     def labelled(self, name: str) -> Dict[Tuple[Tuple[str, str], ...], object]:

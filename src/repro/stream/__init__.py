@@ -17,15 +17,16 @@ accuracy bounds.
 """
 from .cache import CacheEntry, ResultCache
 from .dynamic_graph import (DeltaResult, DeviceGraphState, DynamicGraph,
-                            TrafficMeter)
+                            HostGraphSnapshot, TrafficMeter)
 from .maintenance import STRICT_POLICY, ErrorBudgetPolicy, SketchMaintainer
-from .server import BatchedQueryServer, QueryResult
-from .session import StreamSession, stream_session
+from .server import BatchedQueryServer, OverloadError, QueryResult
+from .session import ServingView, StreamSession, stream_session
 
 __all__ = [
     "CacheEntry", "ResultCache",
-    "DeltaResult", "DeviceGraphState", "DynamicGraph", "TrafficMeter",
+    "DeltaResult", "DeviceGraphState", "DynamicGraph", "HostGraphSnapshot",
+    "TrafficMeter",
     "ErrorBudgetPolicy", "SketchMaintainer", "STRICT_POLICY",
-    "BatchedQueryServer", "QueryResult",
-    "StreamSession", "stream_session",
+    "BatchedQueryServer", "OverloadError", "QueryResult",
+    "ServingView", "StreamSession", "stream_session",
 ]

@@ -24,7 +24,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional, Tuple
+import weakref
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -194,7 +195,7 @@ def _splice_edges_impl(edges, del_pos, ins_pos, ins_uv, m_old, n):
 
 
 @functools.lru_cache(maxsize=None)
-def _update_fns():
+def _update_fns(donate: bool = True):
     """The jitted device-update kernels, donation decided at first *use*.
 
     Donating the old buffer gives true in-place device updates; CPU has no
@@ -202,10 +203,27 @@ def _update_fns():
     not run at import time — it would initialize JAX as an import side
     effect and freeze the decision before the program configures platforms
     (same call-time pattern as ``repro.kernels.ops``).
+
+    ``donate=False`` selects non-donating variants even off-CPU: when a
+    snapshot-isolated serving view pins the published buffers, donating
+    them to build the next version would invalidate arrays an in-flight
+    flush is still reading (:meth:`DynamicGraph.host_snapshot` tracks the
+    pins).
     """
-    donate = (0,) if jax.default_backend() != "cpu" else ()
-    return tuple(jax.jit(fn, donate_argnums=donate) for fn in
+    argnums = (0,) if donate and jax.default_backend() != "cpu" else ()
+    return tuple(jax.jit(fn, donate_argnums=argnums) for fn in
                  (_scatter_rows_impl, _scatter_vals_impl, _splice_edges_impl))
+
+
+class _DeviceBuffers(NamedTuple):
+    # one immutable generation of the device mirror: swapped wholesale at
+    # the end of every delta so concurrent readers never see a half-applied
+    # generation (deg from version N+1, edges still at N)
+    deg: jax.Array
+    adj: jax.Array
+    edges: jax.Array
+    e_cap: int
+    m: int
 
 
 class DeviceGraphState:
@@ -218,20 +236,52 @@ class DeviceGraphState:
     Capacity growth (adjacency headroom exhausted, edge buffer full) happens
     *on device* via sentinel padding — still zero full-graph upload; the
     grown rows themselves arrive through the ordinary touched-row scatter.
+
+    The mirror is **double-buffered**: ``deg``/``adj``/``edges`` read one
+    immutable published generation, and :meth:`apply_delta` builds the next
+    generation into shadow locals (jax arrays are persistent, so the shadow
+    shares all unchanged device memory) before publishing it with a single
+    atomic attribute swap. A reader that captured the published arrays —
+    a ``view()`` graph pinned by an in-flight flush — keeps a consistent
+    version-N world no matter how many deltas land meanwhile.
     """
 
     def __init__(self, dyn: "DynamicGraph", meter: TrafficMeter):
         self.n = dyn.n
         self.meter = meter
-        self.deg = meter.put(dyn.deg, init=True)
-        self.adj = meter.put(dyn.adj, init=True)
-        self.e_cap = pow2_bucket(max(dyn.m, 1))
-        edges = np.full((self.e_cap, 2), dyn.n, dtype=np.int32)
+        e_cap = pow2_bucket(max(dyn.m, 1))
+        edges = np.full((e_cap, 2), dyn.n, dtype=np.int32)
         edges[:dyn.m] = dyn.edge_array()
-        self.edges = meter.put(edges, init=True)
-        self.m = dyn.m
+        self._buf = _DeviceBuffers(meter.put(dyn.deg, init=True),
+                                   meter.put(dyn.adj, init=True),
+                                   meter.put(edges, init=True), e_cap, dyn.m)
         self.last_carry: Optional[jax.Array] = None
         self._identity: Optional[jax.Array] = None
+
+    @property
+    def deg(self) -> jax.Array:
+        """Published device degree vector int32[n]."""
+        return self._buf.deg
+
+    @property
+    def adj(self) -> jax.Array:
+        """Published device padded adjacency int32[n, cap]."""
+        return self._buf.adj
+
+    @property
+    def edges(self) -> jax.Array:
+        """Published device edge list int32[e_cap, 2] (sentinel-padded)."""
+        return self._buf.edges
+
+    @property
+    def e_cap(self) -> int:
+        """Published edge-buffer capacity."""
+        return self._buf.e_cap
+
+    @property
+    def m(self) -> int:
+        """Edge count of the published generation."""
+        return self._buf.m
 
     def identity_carry(self) -> jax.Array:
         """Position carry of a no-splice step (flush-triggered rebuilds)."""
@@ -252,14 +302,19 @@ class DeviceGraphState:
     def _apply_delta(self, dyn: "DynamicGraph", delta: "DeltaResult",
                      del_pos: np.ndarray, old_deg_touched: np.ndarray,
                      m_old: int) -> None:
-        """The untraced body of :meth:`apply_delta`."""
-        _scatter_rows, _scatter_vals, _splice_edges = _update_fns()
+        """The untraced body of :meth:`apply_delta` — shadow build + swap."""
+        # donation consumes the input buffer, which is exactly the published
+        # generation a live snapshot may still be reading: only donate when
+        # nothing pins it (CPU never donates)
+        _scatter_rows, _scatter_vals, _splice_edges = \
+            _update_fns(not dyn.pinned)
         n = self.n
+        deg, adj, edges, e_cap = (self._buf.deg, self._buf.adj,
+                                  self._buf.edges, self._buf.e_cap)
         cap = dyn.capacity
-        if self.adj.shape[1] < cap:          # headroom growth, device-side
-            self.adj = jnp.pad(self.adj,
-                               ((0, 0), (0, cap - self.adj.shape[1])),
-                               constant_values=n)
+        if adj.shape[1] < cap:               # headroom growth, device-side
+            adj = jnp.pad(adj, ((0, 0), (0, cap - adj.shape[1])),
+                          constant_values=n)
         touched = delta.touched
         if touched.size:
             # per-row width covers the row before AND after the delta so
@@ -280,37 +335,85 @@ class DeviceGraphState:
                     verts[:grp.size] = grp
                     rows = np.full((t_b, w_b), n, dtype=np.int32)
                     rows[:grp.size] = dyn.adj[grp, :w_b]
-                    self.adj = _scatter_rows(self.adj, self.meter.put(verts),
-                                             self.meter.put(rows))
+                    adj = _scatter_rows(adj, self.meter.put(verts),
+                                        self.meter.put(rows))
                 # degrees are width-independent: one scatter over all touched
                 t_b = pow2_bucket(touched.size)
                 verts = np.full(t_b, n, dtype=np.int32)
                 verts[:touched.size] = touched
                 degs = np.zeros(t_b, dtype=np.int32)
                 degs[:touched.size] = dyn.deg[touched]
-                self.deg = _scatter_vals(self.deg, self.meter.put(verts),
-                                         self.meter.put(degs))
+                deg = _scatter_vals(deg, self.meter.put(verts),
+                                    self.meter.put(degs))
 
         n_ins = int(delta.inserted.shape[0])
         with trace.span("graph.splice_edges", inserts=n_ins,
                         deletes=int(del_pos.size)):
-            if self.e_cap < m_old + n_ins:   # edge buffer growth, device-side
+            if e_cap < m_old + n_ins:        # edge buffer growth, device-side
                 new_cap = pow2_bucket(m_old + n_ins)
-                self.edges = jnp.pad(self.edges,
-                                     ((0, new_cap - self.e_cap), (0, 0)),
-                                     constant_values=n)
-                self.e_cap = new_cap
+                edges = jnp.pad(edges, ((0, new_cap - e_cap), (0, 0)),
+                                constant_values=n)
+                e_cap = new_cap
             i_b, d_b = pow2_bucket(n_ins), pow2_bucket(del_pos.size)
-            dpos = np.full(d_b, self.e_cap, dtype=np.int32)  # sentinel: drop
+            dpos = np.full(d_b, e_cap, dtype=np.int32)       # sentinel: drop
             dpos[:del_pos.size] = del_pos
-            ipos = np.full(i_b, self.e_cap, dtype=np.int32)
+            ipos = np.full(i_b, e_cap, dtype=np.int32)
             ipos[:n_ins] = m_old + np.arange(n_ins)
             iuv = np.full((i_b, 2), n, dtype=np.int32)
             iuv[:n_ins] = delta.inserted
-            self.edges, self.last_carry = _splice_edges(
-                self.edges, self.meter.put(dpos), self.meter.put(ipos),
+            edges, self.last_carry = _splice_edges(
+                edges, self.meter.put(dpos), self.meter.put(ipos),
                 self.meter.put(iuv), m_old, n)
+        # publication: one atomic swap — no reader ever observes a mix of
+        # generations
+        self._buf = _DeviceBuffers(deg, adj, edges, e_cap, dyn.m)
+
+
+class HostGraphSnapshot:
+    """Frozen host-side view of a :class:`DynamicGraph` at one version.
+
+    ``deg``/``edge_keys`` are captured by reference — deltas rebind those
+    arrays on the graph, so the captured ones never change again. The padded
+    adjacency *is* mutated in place (that is the point of the headroom), so
+    the snapshot keeps a copy-on-write row overlay: just before a delta
+    overwrites a row the graph pushes the pre-delta bytes into every live
+    snapshot's overlay (:meth:`DynamicGraph._shield_snapshots`), a cost
+    sized by the delta and the number of live snapshots, never by n. On
+    capacity growth the adjacency is rebound instead, which freezes the old
+    array for free — the identity check in :meth:`_save_rows` notices.
+    """
+
+    __slots__ = ("n", "m", "version", "deg", "edge_keys", "_adj", "_overlay",
+                 "__weakref__")
+
+    def __init__(self, dyn: "DynamicGraph"):
+        self.n = dyn.n
         self.m = dyn.m
+        self.version = dyn.version
+        self.deg = dyn.deg
+        self.edge_keys = dyn.edge_keys
+        self._adj = dyn.adj
+        self._overlay = {}
+
+    def _save_rows(self, adj: np.ndarray, touched: np.ndarray) -> None:
+        # first save wins: the overlay must hold the row as of snapshot
+        # creation, and a vertex touched twice was already saved pre-first-
+        # mutation (rows untouched since creation are read live — identical)
+        if self._adj is not adj:
+            return                        # adjacency was rebound: frozen
+        overlay = self._overlay
+        for v in touched:
+            iv = int(v)
+            if iv not in overlay:
+                overlay[iv] = np.array(adj[iv], copy=True)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        """Sorted neighbor ids of ``v`` at the snapshot's version."""
+        iv = int(v)
+        row = self._overlay.get(iv)
+        if row is None:
+            row = self._adj[iv]
+        return row[:self.deg[iv]]
 
 
 class DynamicGraph:
@@ -326,6 +429,8 @@ class DynamicGraph:
         self.version = int(version)
         self.traffic = TrafficMeter()
         self._device: Optional[DeviceGraphState] = None
+        self._snapshots: "weakref.WeakSet[HostGraphSnapshot]" = \
+            weakref.WeakSet()
 
     # ------------------------------------------------------------------
     # construction
@@ -368,6 +473,31 @@ class DynamicGraph:
         return _decode_keys(self.n, self.edge_keys)
 
     @property
+    def pinned(self) -> bool:
+        """True while any live :class:`HostGraphSnapshot` pins published
+        state (device buffer donation must then be off — see
+        ``_update_fns``)."""
+        return len(self._snapshots) > 0
+
+    def host_snapshot(self) -> HostGraphSnapshot:
+        """Capture a frozen host view of the current version.
+
+        The snapshot stays valid (and delta-sized cheap) across any number
+        of later deltas; it is tracked by weak reference, so dropping it
+        releases its overlay and its donation pin automatically.
+        """
+        snap = HostGraphSnapshot(self)
+        self._snapshots.add(snap)
+        return snap
+
+    def _shield_snapshots(self, touched: np.ndarray) -> None:
+        """Copy the about-to-be-overwritten adjacency rows into every live
+        snapshot's overlay (called by ``_apply_delta`` pre-mutation)."""
+        if self._snapshots:
+            for snap in tuple(self._snapshots):
+                snap._save_rows(self.adj, touched)
+
+    @property
     def device(self) -> DeviceGraphState:
         """The device-resident mirror, created (one full upload) on first use
         and kept current by every subsequent ``apply_delta``."""
@@ -385,9 +515,9 @@ class DynamicGraph:
         ``apply_delta`` supersedes it, so sessions must repoint at a fresh
         view per delta (``StreamSession`` does).
         """
-        dev = self.device
-        return graph_view(self.n, self.m, dev.deg, dev.adj,
-                          dev.edges[:self.m])
+        buf = self.device._buf             # one read: a concurrent publish
+        return graph_view(self.n, buf.m, buf.deg, buf.adj,
+                          buf.edges[:buf.m])   # must not mix generations
 
     def snapshot(self) -> Graph:
         """Explicit full host materialization: a device ``Graph`` that is
@@ -506,6 +636,7 @@ class DynamicGraph:
             row = np.repeat(np.searchsorted(touched, verts), counts)
             col = np.arange(src.size) - np.repeat(start, counts)
             rows_new[row, col] = dst
+        self._shield_snapshots(touched)
         self.adj[touched] = rows_new
         self.deg = new_deg.astype(np.int32)
         delta = DeltaResult(ins_uv, del_uv, touched, dirty, self.version)

@@ -8,8 +8,14 @@ one ``pair_cardinality_fn`` evaluation serves *all* pair-scored requests in
 a flush, whatever similarity measure each asked for, because every measure
 derives from |N_u ∩ N_v| + degrees (``similarity_from_cardinalities``).
 
-Three serving-tier layers ride on top of the batching:
+Serving-tier layers riding on top of the batching:
 
+* **Snapshot isolation**: every flush captures one published
+  :class:`~repro.stream.session.ServingView` and answers everything from
+  it, so queries run concurrently with delta application — a delta landing
+  mid-flush builds and publishes version N+1 while the flush keeps serving
+  a consistent version N. Each answer's ``answered_version`` names the
+  snapshot it was computed at.
 * **Result cache** (:class:`repro.stream.cache.ResultCache`, on by
   default): answers are keyed by ``(kind, canonical args)`` and carry the
   exact vertex :class:`~repro.engine.Footprint` they were computed from;
@@ -22,8 +28,16 @@ Three serving-tier layers ride on top of the batching:
   dedup unit).
 * **Admission policy**: optional ``max_batch`` (auto-flush when the queue
   fills) and ``max_wait_s`` (``poll()`` flushes once the oldest pending
-  request has waited long enough), so callers submit-and-drain instead of
-  hand-rolling flush loops.
+  request has waited long enough), extended per tenant: every submit may
+  carry ``tenant=`` and ``deadline_s=``, a ``tenant_quota`` sheds
+  over-quota submits with :class:`OverloadError` (counted per tenant), and
+  flushes serve requests earliest-deadline-first.
+* **Background flush worker** (``async_flush=True``): a daemon thread
+  applies the admission policy — flushing on ``max_batch``, ``max_wait_s``
+  and deadline pressure — so submitters never pay flush latency inline and
+  delta application overlaps query service. ``flush()``/``poll()``/
+  ``drain()`` keep their contracts (flush bodies are serialized either
+  way).
 
 Each response carries per-query latency (submit → answer wall time) and
 staleness (graph deltas applied between submit and answer) so a serving tier
@@ -33,6 +47,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
+import threading
 import time
 import weakref
 from typing import Dict, List, Optional, Tuple
@@ -49,6 +65,15 @@ from .cache import ResultCache
 from .session import StreamSession
 
 
+class OverloadError(RuntimeError):
+    """A submit was shed because its tenant's pending quota is exhausted.
+
+    Raised synchronously by ``submit_*``; the shed is counted in
+    ``server_shed_total{tenant=...}`` so overload accounting survives even
+    when callers swallow the exception.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
     """One answered request: value plus latency/staleness provenance."""
@@ -59,6 +84,8 @@ class QueryResult:
     submitted_version: int
     answered_version: int
     latency_s: float
+    tenant: str = "default"
+    deadline_missed: bool = False
 
     @property
     def staleness(self) -> int:
@@ -76,16 +103,31 @@ class _Pending:
     payload: dict
     submitted_version: int
     t_submit: float
+    tenant: str = "default"
+    deadline: Optional[float] = None   # absolute perf_counter() SLO deadline
+
+
+def _edf_key(p: _Pending) -> Tuple[float, int]:
+    # earliest-deadline-first, submission order among the deadline-free
+    return (p.deadline if p.deadline is not None else math.inf, p.request_id)
 
 
 def _freeze(value):
-    """Mark an answer's arrays read-only before caching (hits share them)."""
+    """Recursively mark an answer's arrays read-only before caching/sharing.
+
+    Deep, not shallow: hits and coalesced duplicates share the whole object
+    graph, so a writable array nested anywhere (a list of arrays, a dict
+    inside a dict) would let one caller poison every later reader of the
+    same key.
+    """
     if isinstance(value, np.ndarray):
         value.setflags(write=False)
     elif isinstance(value, dict):
         for item in value.values():
-            if isinstance(item, np.ndarray):
-                item.setflags(write=False)
+            _freeze(item)
+    elif isinstance(value, (list, tuple)):
+        for item in value:
+            _freeze(item)
     return value
 
 
@@ -103,19 +145,41 @@ class BatchedQueryServer:
       cache_capacity: LRU entry bound for the cache.
       max_batch:      auto-flush as soon as this many requests are pending
                       (None = only explicit ``flush()``/``poll()``).
-      max_wait_s:     ``poll()`` flushes once the oldest pending request has
-                      waited this long (None = never due by age).
+      max_wait_s:     ``poll()`` (or the async worker) flushes once the
+                      oldest pending request has waited this long (None =
+                      never due by age).
+      async_flush:    run a background worker thread that applies the
+                      admission policy (max_batch / max_wait_s / deadline
+                      pressure), so submits return immediately and flushes
+                      overlap delta application.
+      tenant_quota:   per-tenant pending-request bound; submits beyond it
+                      raise :class:`OverloadError` (None = unbounded).
+      max_backlog:    async-mode high-water mark: a submit that finds this
+                      many requests already queued blocks until the worker
+                      drains below it (defaults to ``4 * max_batch``, or
+                      256 when ``max_batch`` is None). A hot submitting
+                      thread would otherwise outrun — and, through the GIL
+                      plus lock convoy, starve — the worker, growing the
+                      queue without bound so every answer lands at the
+                      final drain.
     """
 
     def __init__(self, stream: StreamSession, min_batch: int = 64,
                  stats_window: int = 65536, cache: bool = True,
                  cache_capacity: int = 4096,
                  max_batch: Optional[int] = None,
-                 max_wait_s: Optional[float] = None):
+                 max_wait_s: Optional[float] = None,
+                 async_flush: bool = False,
+                 tenant_quota: Optional[int] = None,
+                 max_backlog: Optional[int] = None):
         self.stream = stream
         self.min_batch = int(min_batch)
         self.max_batch = None if max_batch is None else int(max_batch)
         self.max_wait_s = None if max_wait_s is None else float(max_wait_s)
+        self.max_backlog = (int(max_backlog) if max_backlog is not None
+                            else 4 * self.max_batch if self.max_batch
+                            else 256)
+        self.tenant_quota = None if tenant_quota is None else int(tenant_quota)
         self.cache = ResultCache(cache_capacity) if cache else None
         self._listener = None
         if self.cache is not None:
@@ -126,20 +190,30 @@ class BatchedQueryServer:
             cache_ref = weakref.ref(self.cache)
             stream_ref = weakref.ref(stream)
 
-            def _invalidate(vertices):
+            def _invalidate(vertices, epoch):
                 target = cache_ref()
                 if target is None:
                     sess = stream_ref()
                     if sess is not None:
                         sess.remove_delta_listener(_invalidate)
                     return
-                target.invalidate(vertices)
+                target.invalidate(vertices, epoch)
 
             self._listener = _invalidate
             stream.add_delta_listener(_invalidate)
         self._queue: List[_Pending] = []
         self._results: Dict[int, QueryResult] = {}
         self._next_id = 0
+        self._pending_tenant: Dict[str, int] = {}
+        # _lock guards queue/results/counters; _cond wakes the worker and
+        # flush() waiters; _flush_lock serializes flush *bodies* so two
+        # flushes never interleave their snapshot reads and cache puts
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._flush_lock = threading.Lock()
+        self._closed = False
+        self._service_ewma = 0.0       # smoothed flush service time (s)
+        self._stats_window = int(stats_window)
         # serving counters live in the per-server metrics registry;
         # ``stats()`` is a bit-compatible view over these instruments
         self.metrics = MetricsRegistry()
@@ -160,6 +234,12 @@ class BatchedQueryServer:
         for name in self._pad:
             self.metrics.counter("server_pad_rows", path=name, rows="real")
             self.metrics.counter("server_pad_rows", path=name, rows="padded")
+        self._worker: Optional[threading.Thread] = None
+        if async_flush:
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            name="server-flush-worker",
+                                            daemon=True)
+            self._worker.start()
 
     @property
     def _served(self) -> int:
@@ -183,65 +263,128 @@ class BatchedQueryServer:
                              rows="padded").inc(padded)
 
     def close(self) -> None:
-        """Detach from the session's invalidation feed and drop the cache.
+        """Flush-then-detach shutdown: answer everything pending, stop the
+        worker, leave the session's invalidation feed, and drop the cache.
 
-        Without the feed the cache can no longer be kept honest, so a
-        closed server recomputes every answer instead of risking stale
-        hits.
+        Every request submitted before ``close()`` is answered and stays
+        claimable through :meth:`drain`; submits after ``close()`` raise.
+        With ``async_flush`` the worker performs the final flush and is
+        joined before this returns. The cache is dropped because a detached
+        server can no longer keep it honest.
         """
+        with self._cond:
+            first = not self._closed
+            self._closed = True
+            self._cond.notify_all()
+        if self._worker is not None:
+            # the worker's exit path flushes whatever is still queued
+            self._worker.join()
+            self._worker = None
+        elif first:
+            self._flush_queue()        # answer stranded sync-mode requests
         if self._listener is not None:
             self.stream.remove_delta_listener(self._listener)
             self._listener = None
         self.cache = None
+
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` has been called."""
+        return self._closed
 
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
 
     def _submit(self, kind: str, key: Tuple, measure: str = "",
-                pairs: Optional[np.ndarray] = None, **payload) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append(_Pending(rid, kind, key, measure, pairs, payload,
-                                    self.stream.version, time.perf_counter()))
-        if self.max_batch is not None and len(self._queue) >= self.max_batch:
+                pairs: Optional[np.ndarray] = None, *,
+                tenant: str = "default",
+                deadline_s: Optional[float] = None, **payload) -> int:
+        t_now = time.perf_counter()
+        deadline = None if deadline_s is None else t_now + float(deadline_s)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "BatchedQueryServer is closed; new submits are rejected "
+                    "(close() answered everything submitted before it)")
+            pending = self._pending_tenant.get(tenant, 0)
+            if self.tenant_quota is not None and pending >= self.tenant_quota:
+                self.metrics.counter("server_shed_total", tenant=tenant).inc()
+                raise OverloadError(
+                    f"tenant {tenant!r} has {pending} pending requests "
+                    f"(quota {self.tenant_quota}); request shed")
+            rid = self._next_id
+            self._next_id += 1
+            self._queue.append(_Pending(
+                rid, kind, key, measure, pairs, payload,
+                self.stream.serving_view().version, t_now, tenant, deadline))
+            self._pending_tenant[tenant] = pending + 1
+            due = (self.max_batch is not None
+                   and len(self._queue) >= self.max_batch)
+            if self._worker is not None:
+                self._cond.notify_all()    # admission runs on the worker
+                # backpressure: block until the worker drains below the
+                # high-water mark — cond.wait releases _lock, so this is
+                # also what hands the convoyed lock to the worker
+                throttled = False
+                while (len(self._queue) >= self.max_backlog
+                       and not self._closed):
+                    if not throttled:
+                        self.metrics.counter(
+                            "server_backpressure_total").inc()
+                        throttled = True
+                    self._cond.wait(0.05)
+                return rid
+        if due:
             self._flush_queue()
         return rid
 
-    def submit_similarity(self, pairs, measure: str = "jaccard") -> int:
+    def submit_similarity(self, pairs, measure: str = "jaccard", *,
+                          tenant: str = "default",
+                          deadline_s: Optional[float] = None) -> int:
         """Score vertex pairs [P, 2] under any cardinality-derived measure."""
         # copy, not view: the key snapshots the bytes here, and the flush
         # computes from this array — a caller reusing its buffer must not
         # be able to poison the cache with a key/value mismatch
         pairs = np.array(pairs, dtype=np.int32, copy=True).reshape(-1, 2)
         key = ("similarity", measure, pairs.shape[0], pairs.tobytes())
-        return self._submit("similarity", key, measure, pairs)
+        return self._submit("similarity", key, measure, pairs,
+                            tenant=tenant, deadline_s=deadline_s)
 
     def submit_link_prediction(self, u: int, top_k: int = 8,
-                               measure: str = "common") -> int:
+                               measure: str = "common", *,
+                               tenant: str = "default",
+                               deadline_s: Optional[float] = None) -> int:
         """Top-k predicted partners for u among its distance-2 non-neighbors
         (Listing-5 candidates, served online).
 
-        The candidate set is materialized from the live graph at *flush*
-        time, not here: with deltas interleaved between submit and flush, a
+        The candidate set is materialized from the flush's serving snapshot,
+        not here: with deltas interleaved between submit and flush, a
         submit-time candidate set would mix stale candidates (e.g. a vertex
         that became a neighbor still "predicted") with fresh scores.
         """
         key = ("linkpred", measure, int(u), int(top_k))
-        return self._submit("linkpred", key, measure,
-                            u=int(u), top_k=int(top_k))
+        return self._submit("linkpred", key, measure, u=int(u),
+                            top_k=int(top_k), tenant=tenant,
+                            deadline_s=deadline_s)
 
-    def submit_membership(self, u: int, candidates) -> int:
+    def submit_membership(self, u: int, candidates, *,
+                          tenant: str = "default",
+                          deadline_s: Optional[float] = None) -> int:
         """x ∈ N_u membership tests (BF answers straight from the sketch)."""
         cand = np.array(candidates, dtype=np.int32, copy=True)  # see above
         key = ("membership", int(u), cand.shape[0], cand.tobytes())
-        return self._submit("membership", key, u=int(u), candidates=cand)
+        return self._submit("membership", key, u=int(u), candidates=cand,
+                            tenant=tenant, deadline_s=deadline_s)
 
-    def submit_triangle_count(self) -> int:
+    def submit_triangle_count(self, *, tenant: str = "default",
+                              deadline_s: Optional[float] = None) -> int:
         """Triangle-count query over the live graph (shared engine pass)."""
-        return self._submit("tc", ("tc",))
+        return self._submit("tc", ("tc",), tenant=tenant,
+                            deadline_s=deadline_s)
 
-    def submit_clique_count(self, k: int = 4) -> int:
+    def submit_clique_count(self, k: int = 4, *, tenant: str = "default",
+                            deadline_s: Optional[float] = None) -> int:
         """k-clique-count query (k in {4, 5}) over the live graph.
 
         Both sizes fold every edge, so like ``tc`` they carry a whole-graph
@@ -250,10 +393,12 @@ class BatchedQueryServer:
         """
         if k not in (4, 5):
             raise ValueError(f"clique count supports k in {{4, 5}}, got {k}")
-        return self._submit("cliques", ("cliques", int(k)), k=int(k))
+        return self._submit("cliques", ("cliques", int(k)), k=int(k),
+                            tenant=tenant, deadline_s=deadline_s)
 
     def submit_local_cluster(self, seed: int, alpha: float = 0.15,
-                             eps: float = 1e-4) -> int:
+                             eps: float = 1e-4, *, tenant: str = "default",
+                             deadline_s: Optional[float] = None) -> int:
         """Seed-centric local cluster query (``localcluster(seed, α, ε)``).
 
         All localcluster requests sharing ``(alpha, eps)`` in one flush run
@@ -266,11 +411,13 @@ class BatchedQueryServer:
         """
         key = ("localcluster", int(seed), float(alpha), float(eps))
         return self._submit("localcluster", key, seed=int(seed),
-                            alpha=float(alpha), eps=float(eps))
+                            alpha=float(alpha), eps=float(eps),
+                            tenant=tenant, deadline_s=deadline_s)
 
     def pending_count(self) -> int:
         """Number of submitted-but-unflushed requests."""
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
     # ------------------------------------------------------------------
     # serving
@@ -280,7 +427,9 @@ class BatchedQueryServer:
         """Answer everything pending; return (and clear) unclaimed results.
 
         Results answered earlier by the admission policy (``max_batch`` /
-        ``poll()``) and not yet drained are included.
+        ``poll()`` / the async worker) and not yet drained are included.
+        Synchronous in both modes: the flush body runs on the calling
+        thread, serialized against the worker.
         """
         self._flush_queue()
         return self.drain()
@@ -290,48 +439,118 @@ class BatchedQueryServer:
 
         Flushes when the queue holds ``max_batch`` requests or the oldest
         pending request has waited ``max_wait_s``; either way returns every
-        answered-but-undrained result (possibly none).
+        answered-but-undrained result (possibly none). With ``async_flush``
+        the worker applies the policy continuously, so ``poll()`` just
+        drains.
         """
-        if self._queue:
-            due_batch = (self.max_batch is not None
-                         and len(self._queue) >= self.max_batch)
-            due_age = (self.max_wait_s is not None
-                       and time.perf_counter() - self._queue[0].t_submit
-                       >= self.max_wait_s)
-            if due_batch or due_age:
+        if self._worker is None:
+            with self._lock:
+                due, _ = self._due_locked()
+            if due:
                 self._flush_queue()
         return self.drain()
 
     def drain(self) -> Dict[int, QueryResult]:
         """Return and clear every answered-but-unclaimed result."""
-        out, self._results = self._results, {}
+        with self._lock:
+            out, self._results = self._results, {}
         return out
 
-    def _link_candidates(self, u: int) -> np.ndarray:
-        """Distance-2 non-neighbors of ``u`` on the *live* graph (sorted)."""
-        dyn = self.stream.dyn
-        nbrs = dyn.neighbors(int(u))
+    # ------------------------------------------------------------------
+    # background flush worker
+    # ------------------------------------------------------------------
+
+    def _due_locked(self) -> Tuple[bool, Optional[float]]:
+        """Admission decision under ``_lock``: ``(due_now, wait_timeout)``.
+
+        Due when the queue reached ``max_batch``, the oldest request aged
+        past ``max_wait_s``, or the earliest SLO deadline leaves less slack
+        than one smoothed flush service time. Otherwise returns how long the
+        worker may sleep before the earliest of those can trip.
+        """
+        if not self._queue:
+            return False, None
+        if self.max_batch is not None and len(self._queue) >= self.max_batch:
+            return True, None
+        now = time.perf_counter()
+        timeouts = []
+        if self.max_wait_s is not None:
+            age = now - self._queue[0].t_submit
+            if age >= self.max_wait_s:
+                return True, None
+            timeouts.append(self.max_wait_s - age)
+        deadlines = [p.deadline for p in self._queue
+                     if p.deadline is not None]
+        if deadlines:
+            slack = min(deadlines) - now - self._service_ewma
+            if slack <= 0.0:
+                return True, None
+            timeouts.append(slack)
+        return False, (min(timeouts) if timeouts else None)
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                due, timeout = self._due_locked()
+                while not due and not self._closed:
+                    self._cond.wait(timeout)
+                    due, timeout = self._due_locked()
+                if self._closed and not self._queue:
+                    return            # final flush already happened below
+            self._flush_queue()
+
+    # ------------------------------------------------------------------
+    # the flush itself
+    # ------------------------------------------------------------------
+
+    def _link_candidates(self, host, u: int) -> np.ndarray:
+        """Distance-2 non-neighbors of ``u`` on the flush snapshot (sorted)."""
+        nbrs = host.neighbors(int(u))
         cand = np.unique(np.concatenate(
-            [dyn.neighbors(int(x)) for x in nbrs]
+            [host.neighbors(int(x)) for x in nbrs]
             or [np.zeros(0, np.int32)]))
         return cand[(cand != u) & ~np.isin(cand, nbrs)]
 
     def _flush_queue(self) -> None:
         """Answer every pending request: cache, coalesce, one batch per
         shape class for the misses, then fan out by request id."""
-        if not self._queue:
-            return
-        with trace.span("server.flush") as fsp:
-            self._flush_body(fsp)
+        with self._flush_lock:
+            with self._lock:
+                queue, self._queue = self._queue, []
+                for p in queue:
+                    left = self._pending_tenant.get(p.tenant, 1) - 1
+                    if left > 0:
+                        self._pending_tenant[p.tenant] = left
+                    else:
+                        self._pending_tenant.pop(p.tenant, None)
+            if not queue:
+                return
+            queue.sort(key=_edf_key)        # earliest-deadline-first
+            t0 = time.perf_counter()
+            with trace.span("server.flush") as fsp:
+                self._flush_body(queue, fsp)
+            dt = time.perf_counter() - t0
+            # smoothed service-time estimate drives the worker's
+            # deadline-pressure check (how early must a flush start so its
+            # requests still make their SLOs)
+            self._service_ewma = (dt if self._service_ewma == 0.0
+                                  else 0.8 * self._service_ewma + 0.2 * dt)
+        with self._cond:
+            self._cond.notify_all()          # wake poll()/flush() waiters
 
-    def _flush_body(self, fsp) -> None:
-        """The traced body of :meth:`_flush_queue` (``fsp`` is its span)."""
-        queue, self._queue = self._queue, []
+    def _flush_body(self, queue: List[_Pending], fsp) -> None:
+        """The traced body of :meth:`_flush_queue` (``fsp`` is its span).
+
+        Snapshot-isolated: captures one published ServingView up front and
+        reads *nothing* from the live session afterwards — deltas applied
+        concurrently publish later views and cannot tear this flush.
+        """
         self._c_flushes.inc()
-        sess = self.stream.session
-        dyn = self.stream.dyn
-        version = self.stream.version
-        vol_now = 2.0 * dyn.m
+        snap = self.stream.serving_view()
+        sess = snap.session
+        host = snap.host
+        version = snap.version
+        vol_now = 2.0 * host.m
 
         # coalesce: identical requests (same canonical key) compute once
         by_key: "collections.OrderedDict[Tuple, List[_Pending]]" = \
@@ -358,10 +577,11 @@ class BatchedQueryServer:
         # to this span's cache/coalesce/pad accounting
         fsp.set(requests=len(queue), unique_keys=len(by_key),
                 coalesced=coalesced, cache_hits=len(by_key) - len(misses),
-                version=version)
+                version=version, epoch=snap.epoch,
+                tenants=len({p.tenant for p in queue}))
 
         # one shared cardinality pass for ALL uncached pair-scored requests;
-        # link-prediction candidates materialize HERE, from the live graph
+        # link-prediction candidates materialize HERE, from the snapshot
         pair_keys: List[Tuple] = []
         pair_blocks: List[np.ndarray] = []
         lp_cand: Dict[Tuple, np.ndarray] = {}
@@ -372,7 +592,7 @@ class BatchedQueryServer:
                 pair_blocks.append(p0.pairs)
             elif p0.kind == "linkpred":
                 u = p0.payload["u"]
-                cand = self._link_candidates(u)
+                cand = self._link_candidates(host, u)
                 lp_cand[key] = cand
                 pair_keys.append(key)
                 pair_blocks.append(np.stack(
@@ -423,13 +643,14 @@ class BatchedQueryServer:
                     off += k
 
         # one batched push + sweep per (alpha, eps) group of uncached seeds
-        # (seeds are unique per group by construction: the key dedups them)
+        # (seeds are unique per group by construction: the key dedups them;
+        # groups run in EDF order because the queue was EDF-sorted)
         lc_groups: "collections.OrderedDict[Tuple, List[Tuple]]" = \
             collections.OrderedDict()
         for key in misses:
             if key[0] == "localcluster":
                 lc_groups.setdefault(key[2:], []).append(key)
-        deg_host = dyn.deg
+        deg_host = host.deg
         for (alpha, eps), group in lc_groups.items():
             seeds = np.array([key[1] for key in group], np.int32)
             # pad with a repeat of the first seed (dropped below); the same
@@ -442,7 +663,7 @@ class BatchedQueryServer:
             with trace.span("server.localcluster_batch",
                             seeds=int(seeds.size), padded=padded.shape[0],
                             alpha=float(alpha), eps=float(eps)) as lsp:
-                res = self.stream.local_cluster(padded, alpha=alpha, eps=eps)
+                res = sess.local_cluster(padded, alpha=alpha, eps=eps)
                 lsp.fence(res.best_conductance)
             sizes = np.asarray(res.best_size)
             phis = np.asarray(res.best_conductance)
@@ -465,12 +686,13 @@ class BatchedQueryServer:
                     # min(vol, 2m − vol): cache only clusters provably on
                     # the small side, guarded against later volume drift
                     swept = order[i, :sup[i]]
-                    swept = swept[swept < dyn.n]
+                    swept = swept[swept < host.n]
                     max2vol = 2.0 * float(deg_host[swept].sum())
                     if self.cache.cacheable(max2vol, vol_now):
                         fp = Footprint.of(res.footprint(i), key[1])
                         self.cache.put(key, value, fp, version,
-                                       max2vol=max2vol, vol_total=vol_now)
+                                       max2vol=max2vol, vol_total=vol_now,
+                                       epoch=snap.epoch)
 
         # remaining miss kinds + cache fills
         for key in misses:
@@ -490,14 +712,14 @@ class BatchedQueryServer:
                 # new edge at any neighbor mints a new candidate, so the
                 # footprint is {u} ∪ N(u) ∪ candidates
                 u = p0.payload["u"]
-                fp = Footprint.of(u, dyn.neighbors(u), cand)
+                fp = Footprint.of(u, host.neighbors(u), cand)
             elif kind == "membership":
                 cand = p0.payload["candidates"]
                 padded = np.full(pow2_bucket(cand.shape[0], self.min_batch),
-                                 dyn.n, np.int32)
+                                 host.n, np.int32)
                 padded[:cand.shape[0]] = cand
                 self._pad_add("membership", cand.shape[0], padded.shape[0])
-                value = np.asarray(self.stream.membership(
+                value = np.asarray(snap.membership(
                     p0.payload["u"], padded))[:cand.shape[0]]
                 fp = Footprint.of(p0.payload["u"])
             elif kind == "tc":
@@ -505,9 +727,9 @@ class BatchedQueryServer:
                 fp = Footprint.whole_graph()
             elif kind == "cliques":
                 if p0.payload["k"] == 5:
-                    value = float(self.stream.five_clique_count())
+                    value = float(sess.five_clique_count())
                 else:
-                    value = float(self.stream.four_clique_count())
+                    value = float(sess.four_clique_count())
                 fp = Footprint.whole_graph()
             else:  # pragma: no cover - guarded at submit time
                 raise ValueError(kind)
@@ -515,23 +737,40 @@ class BatchedQueryServer:
             # hits) all share this object — nobody gets to mutate it
             answers[key] = _freeze(value)
             if self.cache is not None:
-                self.cache.put(key, value, fp, version)
+                self.cache.put(key, value, fp, version, epoch=snap.epoch)
 
         # fan out: every request id gets its key's (shared) answer
-        for p in queue:
-            lat = time.perf_counter() - p.t_submit
-            res = QueryResult(p.request_id, p.kind, answers[p.key],
-                              p.submitted_version, version, lat)
-            self._h_latency.observe(lat)
-            self._h_staleness.observe(res.staleness)
-            self._c_served.inc()
-            self.metrics.counter("server_served_total", kind=p.kind).inc()
-            self._results[p.request_id] = res
+        misses_deadline = 0
+        with self._lock:
+            for p in queue:
+                t_now = time.perf_counter()
+                lat = t_now - p.t_submit
+                missed = p.deadline is not None and t_now > p.deadline
+                misses_deadline += missed
+                res = QueryResult(p.request_id, p.kind, answers[p.key],
+                                  p.submitted_version, version, lat,
+                                  p.tenant, missed)
+                self._h_latency.observe(lat)
+                self._h_staleness.observe(res.staleness)
+                self._c_served.inc()
+                self.metrics.counter("server_served_total", kind=p.kind).inc()
+                self.metrics.counter("server_tenant_served_total",
+                                     tenant=p.tenant).inc()
+                self.metrics.histogram("server_tenant_latency_s",
+                                       window=self._stats_window,
+                                       tenant=p.tenant).observe(lat)
+                if missed:
+                    self.metrics.counter("server_deadline_miss_total",
+                                         tenant=p.tenant).inc()
+                self._results[p.request_id] = res
+        fsp.set(deadline_misses=misses_deadline)
 
     def stats(self) -> dict:
         """Serving counters: per-kind served/pad numbers, latency
-        percentiles (only once something was served), coalescing and cache
-        effectiveness.
+        percentiles (only once something was served), coalescing, cache
+        effectiveness, and per-tenant admission accounting (served / shed /
+        deadline misses / latency tail) once any tenant-labelled traffic
+        exists.
 
         A view over :attr:`metrics` — every number below is read back from
         a registry instrument; the dict shape and values are bit-compatible
@@ -560,6 +799,29 @@ class BatchedQueryServer:
             out["latency_mean_s"] = float(lat.mean())
             out["latency_p95_s"] = float(np.percentile(lat, 95))
             out["staleness_mean"] = float(np.mean(self._h_staleness.values()))
+        tenants: Dict[str, dict] = {}
+        for name, field in (("server_tenant_served_total", "served"),
+                            ("server_shed_total", "shed"),
+                            ("server_deadline_miss_total",
+                             "deadline_missed")):
+            for labels, inst in self.metrics.labelled(name).items():
+                t = dict(labels)["tenant"]
+                tenants.setdefault(t, {"served": 0, "shed": 0,
+                                       "deadline_missed": 0})[field] = \
+                    inst.value
+        for labels, inst in \
+                self.metrics.labelled("server_tenant_latency_s").items():
+            vals = inst.values()
+            if vals.size:
+                tenants.setdefault(
+                    dict(labels)["tenant"],
+                    {"served": 0, "shed": 0, "deadline_missed": 0}).update(
+                    latency_p50_s=float(np.percentile(vals, 50)),
+                    latency_p95_s=float(np.percentile(vals, 95)),
+                    latency_p99_s=float(np.percentile(vals, 99)))
+        if tenants:
+            out["tenants"] = tenants
+            out["shed"] = sum(t["shed"] for t in tenants.values())
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         return out

@@ -22,7 +22,9 @@ bounded retention), so a serving process can resume mid-stream.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import threading
 from typing import Optional
 
 import jax
@@ -34,8 +36,46 @@ from ..core.sketches import SketchSet, bloom_membership
 from ..engine.api import (DeviceCarry, EnginePlan, MiningSession,
                           pow2_bucket, resolve_plan)
 from ..obs import accuracy, trace
-from .dynamic_graph import DynamicGraph
+from .dynamic_graph import DynamicGraph, HostGraphSnapshot
 from .maintenance import ErrorBudgetPolicy, SketchMaintainer
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingView:
+    """One published, snapshot-isolated serving generation.
+
+    Everything a flush needs to answer queries at a single consistent
+    version: the engine session (graph view + sketch + per-edge cardinality
+    cache, all rebound-only state), the sketch, and a host graph snapshot
+    for the few host-side reads (link-prediction candidates, local-cluster
+    volume accounting). ``apply_delta`` builds the *next* view off to the
+    side and publishes it with one atomic attribute swap, so an in-flight
+    flush that captured this view keeps serving version N bit-identically
+    while version N+1 lands.
+
+    ``epoch`` is the publication sequence number — unlike ``version`` it
+    also advances on maintenance rebuilds (which change sketch rows without
+    an edge delta), which is what the result cache's stale-put guard keys
+    on.
+    """
+
+    version: int
+    epoch: int
+    session: MiningSession
+    sketch: Optional[SketchSet]
+    host: HostGraphSnapshot
+
+    def membership(self, u: int, candidates) -> jax.Array:
+        """Membership tests at this view's version (BF answers from the
+        captured sketch row; other kinds answer exactly from the host
+        snapshot) — the snapshot twin of ``StreamSession.membership``."""
+        sk = self.sketch
+        cand = jnp.asarray(np.asarray(candidates, dtype=np.int32))
+        if sk is not None and sk.kind == "bf":
+            return bloom_membership(sk.data[u], cand, self.host.n,
+                                    sk.num_hashes, sk.total_bits, sk.seed)
+        return jnp.asarray(np.isin(np.asarray(candidates),
+                                   self.host.neighbors(u)))
 
 
 class StreamSession:
@@ -66,6 +106,12 @@ class StreamSession:
         # the session's metric home: the traffic meter's registry, so one
         # snapshot carries upload accounting plus anything recorded here
         self.metrics = dyn.traffic.registry
+        # snapshot-isolated serving: mutations serialize on this lock and
+        # end by atomically publishing a fresh ServingView; readers never
+        # block and never see a half-applied delta
+        self._mutate_lock = threading.RLock()
+        self._serving = ServingView(0, 0, self.session, sketch,
+                                    dyn.host_snapshot())
 
     # ------------------------------------------------------------------
     # mutation
@@ -81,15 +127,26 @@ class StreamSession:
         """The maintained sketch, or None in exact mode."""
         return self.maintainer.sketch if self.maintainer else None
 
+    def serving_view(self) -> ServingView:
+        """The currently published :class:`ServingView` (atomic read).
+
+        Flushes capture this once and serve everything from it — a delta
+        landing mid-flush builds and publishes the *next* view without
+        disturbing the captured one.
+        """
+        return self._serving
+
     def add_delta_listener(self, fn) -> None:
-        """Subscribe ``fn(vertices)`` to the invalidation feed.
+        """Subscribe ``fn(vertices, epoch)`` to the invalidation feed.
 
         After every delta (and every maintenance :meth:`flush` that rebuilt
         rows) each listener is called with the sorted int64 vertex set whose
-        adjacency, degree, or sketch row changed — ``touched ∪ rebuilt``.
-        This is exactly the set a serving-tier result cache must evict
-        footprint-intersecting entries for; nothing else can have changed
-        any answer.
+        adjacency, degree, or sketch row changed — ``touched ∪ rebuilt`` —
+        and the publication epoch of the change. This is exactly the set a
+        serving-tier result cache must evict footprint-intersecting entries
+        for; nothing else can have changed any answer. Listeners fire
+        *before* the new :class:`ServingView` publishes, so by the time any
+        flush can read the new version its cache is already clean.
         """
         self._delta_listeners.append(fn)
 
@@ -98,12 +155,21 @@ class StreamSession:
         if fn in self._delta_listeners:
             self._delta_listeners.remove(fn)
 
-    def _publish_invalid(self, vertices: np.ndarray) -> None:
+    def _publish_invalid(self, vertices: np.ndarray, epoch: int) -> None:
         """Push one delta's changed-vertex set to every listener (a copy of
         the list: a listener may unsubscribe itself mid-publish)."""
         if vertices.size:
             for fn in list(self._delta_listeners):
-                fn(vertices)
+                fn(vertices, epoch)
+
+    def _publish_view(self) -> None:
+        """Atomically publish the post-mutation state as the serving view
+        (callers hold ``_mutate_lock`` and have already fired the
+        invalidation feed)."""
+        self._serving = ServingView(
+            self.version, self._serving.epoch + 1, self.session,
+            self.maintainer.sketch if self.maintainer else None,
+            self.dyn.host_snapshot())
 
     def _device_carry(self, carry_host: Optional[np.ndarray],
                       identity: bool) -> Optional[DeviceCarry]:
@@ -130,7 +196,7 @@ class StreamSession:
         the returned ``bytes_uploaded`` (also in ``stats()["traffic"]``) is
         the exact host → device traffic, proportional to the delta size.
         """
-        with trace.span("stream.apply_delta") as sp:
+        with trace.span("stream.apply_delta") as sp, self._mutate_lock:
             old_keys = self.dyn.edge_keys
             self.dyn.traffic.begin_delta()
             delta = self.dyn.apply_delta(inserts, deletes)
@@ -148,7 +214,11 @@ class StreamSession:
                 carry = self._device_carry(
                     self.dyn.carry_index(old_keys, invalid),
                     identity=delta.is_noop)  # noop delta ran no edge splice
-                recomputed = self.session.refresh(
+                # fork-refresh-publish: the live session keeps serving the
+                # previous version while the fork absorbs the delta; the
+                # swap below is the version-N+1 publication point
+                new_session = self.session.fork()
+                recomputed = new_session.refresh(
                     graph,
                     self.maintainer.sketch if self.maintainer else None,
                     carry)
@@ -158,7 +228,11 @@ class StreamSession:
                 car = 0 if recomputed is None else max(graph.m - recomputed, 0)
                 self.cards_recomputed += rec
                 self.cards_carried += car
-                self._publish_invalid(invalid)
+                # invalidation completes BEFORE publication: once a flush
+                # can capture the new view, every stale cache entry is gone
+                self._publish_invalid(invalid, self._serving.epoch + 1)
+                self.session = new_session
+            self._publish_view()
             if self.maintainer is not None:
                 accuracy.record_maintenance(self.maintainer.stats(),
                                             self.metrics)
@@ -181,7 +255,7 @@ class StreamSession:
         lazy error-budget policy."""
         if self.maintainer is None or not self.maintainer.dirty.any():
             return 0       # nothing to rebuild: not a metered traffic step
-        with trace.span("stream.flush") as sp:
+        with trace.span("stream.flush") as sp, self._mutate_lock:
             self.dyn.traffic.begin_delta()
             self.dyn.traffic.commit_step()
             rebuilt = self.maintainer.flush()
@@ -189,12 +263,16 @@ class StreamSession:
                 carry = self._device_carry(
                     self.dyn.carry_index(self.dyn.edge_keys, rebuilt),
                     identity=True)           # edge set unchanged by a flush
-                self.session.refresh(self.dyn.view(), self.maintainer.sketch,
-                                     carry)
+                new_session = self.session.fork()
+                new_session.refresh(self.dyn.view(), self.maintainer.sketch,
+                                    carry)
                 # a rebuild replaces stale sketch rows: cached answers
                 # reading those rows are now wrong, exactly like a delta
                 # touching them
-                self._publish_invalid(np.asarray(rebuilt, dtype=np.int64))
+                self._publish_invalid(np.asarray(rebuilt, dtype=np.int64),
+                                      self._serving.epoch + 1)
+                self.session = new_session
+                self._publish_view()
             sp.set(rows_rebuilt=int(rebuilt.size))
         return int(rebuilt.size)
 
@@ -289,6 +367,13 @@ class StreamSession:
         arbitrary JSON-able dict the caller can validate at restore time
         (e.g. the replay driver's stream parameters)."""
         step = self.version if step is None else int(step)
+        # hold the mutation lock: a delta landing mid-save must not tear the
+        # checkpoint across versions (adj from N+1, edge_keys from N)
+        with self._mutate_lock:
+            return self._save_locked(directory, step, keep, extra)
+
+    def _save_locked(self, directory: str, step: int, keep: int,
+                     extra: Optional[dict]) -> str:
         tree = {
             "config": np.frombuffer(
                 json.dumps(self._config(extra)).encode(),
@@ -344,6 +429,9 @@ class StreamSession:
             mt.stale = tree["stale"].astype(np.int64)
             mt.rows_incremental, mt.rows_rebuilt, mt.deltas_applied = (
                 int(x) for x in tree["counters"])
+        # __init__ published a view stamped version 0; re-publish so the
+        # serving view carries the restored version
+        self._publish_view()
         return self
 
 

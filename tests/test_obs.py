@@ -176,6 +176,66 @@ def test_histogram_window_and_labelled_enumeration():
     assert reg.snapshot() == {}
 
 
+def test_concurrent_counter_increments_lose_nothing():
+    # `self._value += 1` is several bytecodes; without the per-instrument
+    # lock, contending threads interleave mid-RMW and increments vanish
+    # (this test fails on the unlocked implementation)
+    import threading
+    reg = MetricsRegistry()
+    per_thread, n_threads = 20000, 8
+
+    def hammer():
+        # fetch through the registry each time: exercises _get's lock too
+        c = reg.counter("served", kind="race")
+        g = reg.gauge("level")
+        for _ in range(per_thread):
+            c.inc()
+            g.add(1.0)
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.value("served", kind="race") == per_thread * n_threads
+    assert reg.value("level") == pytest.approx(per_thread * n_threads)
+
+
+def test_concurrent_histogram_observe_and_values():
+    # deque iteration while another thread appends past maxlen raises
+    # RuntimeError unless observe/values share the instrument lock; count
+    # is an unlocked += without the fix and drops updates
+    import threading
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", window=64)
+    per_thread, n_threads = 5000, 4
+    errors = []
+
+    def observe():
+        try:
+            for i in range(per_thread):
+                h.observe(float(i))
+        except RuntimeError as exc:     # pragma: no cover - the regression
+            errors.append(exc)
+
+    def read():
+        try:
+            for _ in range(2000):
+                vals = h.values()
+                assert vals.size <= 64
+        except RuntimeError as exc:     # pragma: no cover - the regression
+            errors.append(exc)
+
+    threads = ([threading.Thread(target=observe) for _ in range(n_threads)]
+               + [threading.Thread(target=read)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert h.count == per_thread * n_threads
+
+
 # ---------------------------------------------------------------------------
 # accuracy telemetry
 # ---------------------------------------------------------------------------

@@ -206,10 +206,12 @@ def test_dropped_server_unsubscribes_from_delta_feed():
     # close() detaches an alive server immediately AND drops its cache —
     # without the feed, cached entries could silently go stale
     srv2 = BatchedQueryServer(st, min_batch=8)
-    srv2.close()
+    rid = srv2.submit_triangle_count()
+    srv2.close()                       # flush-then-detach: rid is answered
     assert len(st._delta_listeners) == 0 and srv2.cache is None
-    rid = srv2.submit_triangle_count()            # still serves, uncached
-    assert rid in srv2.flush()
+    assert rid in srv2.drain()
+    with pytest.raises(RuntimeError):  # a closed server rejects new work
+        srv2.submit_triangle_count()
 
 
 def test_oversized_localcluster_is_not_cached():
