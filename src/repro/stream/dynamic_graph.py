@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import threading
 import weakref
 from typing import NamedTuple, Optional, Tuple
 
@@ -204,11 +205,13 @@ def _update_fns(donate: bool = True):
     effect and freeze the decision before the program configures platforms
     (same call-time pattern as ``repro.kernels.ops``).
 
-    ``donate=False`` selects non-donating variants even off-CPU: when a
-    snapshot-isolated serving view pins the published buffers, donating
-    them to build the next version would invalidate arrays an in-flight
-    flush is still reading (:meth:`DynamicGraph.host_snapshot` tracks the
-    pins).
+    ``donate=False`` selects non-donating variants even off-CPU: when an
+    in-flight flush still reads the published buffers, donating them to
+    build the next version would invalidate arrays under it.
+    :meth:`DynamicGraph.donate_ok` makes the per-delta call — a session's
+    lease-aware policy when one is installed (donation re-engages whenever
+    no stale view is in flight and no read lease is out), else the
+    conservative any-live-snapshot veto.
     """
     argnums = (0,) if donate and jax.default_backend() != "cpu" else ()
     return tuple(jax.jit(fn, donate_argnums=argnums) for fn in
@@ -304,10 +307,11 @@ class DeviceGraphState:
                      m_old: int) -> None:
         """The untraced body of :meth:`apply_delta` — shadow build + swap."""
         # donation consumes the input buffer, which is exactly the published
-        # generation a live snapshot may still be reading: only donate when
-        # nothing pins it (CPU never donates)
+        # generation an in-flight reader may still be using: only donate
+        # when the graph's donation policy proves nothing does (CPU never
+        # donates)
         _scatter_rows, _scatter_vals, _splice_edges = \
-            _update_fns(not dyn.pinned)
+            _update_fns(dyn.donate_ok())
         n = self.n
         deg, adj, edges, e_cap = (self._buf.deg, self._buf.adj,
                                   self._buf.edges, self._buf.e_cap)
@@ -381,10 +385,15 @@ class HostGraphSnapshot:
     sized by the delta and the number of live snapshots, never by n. On
     capacity growth the adjacency is rebound instead, which freezes the old
     array for free — the identity check in :meth:`_save_rows` notices.
+
+    Snapshots are read concurrently with delta application (that is the
+    whole point), so shield+overwrite on the delta thread and the
+    overlay-miss → live-row read in :meth:`neighbors` synchronize on the
+    graph's shared ``_row_lock``; see :meth:`neighbors` for the protocol.
     """
 
     __slots__ = ("n", "m", "version", "deg", "edge_keys", "_adj", "_overlay",
-                 "__weakref__")
+                 "_lock", "__weakref__")
 
     def __init__(self, dyn: "DynamicGraph"):
         self.n = dyn.n
@@ -394,6 +403,7 @@ class HostGraphSnapshot:
         self.edge_keys = dyn.edge_keys
         self._adj = dyn.adj
         self._overlay = {}
+        self._lock = dyn._row_lock
 
     def _save_rows(self, adj: np.ndarray, touched: np.ndarray) -> None:
         # first save wins: the overlay must hold the row as of snapshot
@@ -408,11 +418,25 @@ class HostGraphSnapshot:
                 overlay[iv] = np.array(adj[iv], copy=True)
 
     def neighbors(self, v: int) -> np.ndarray:
-        """Sorted neighbor ids of ``v`` at the snapshot's version."""
+        """Sorted neighbor ids of ``v`` at the snapshot's version.
+
+        Safe against a delta landing concurrently: the delta thread holds
+        the graph's row lock across "save pre-delta rows into overlays,
+        then overwrite" (:meth:`DynamicGraph._apply_delta`), so under the
+        same lock either the overlay already has the pre-delta row or the
+        live row still *is* the pre-delta row — and the live-row path
+        returns a copy taken inside the lock, so the result cannot change
+        between return and consumption. Overlay rows are private frozen
+        copies; slicing them needs no copy. The unlocked first probe is
+        sound: a hit is immutable, and a miss is re-checked under the lock.
+        """
         iv = int(v)
         row = self._overlay.get(iv)
         if row is None:
-            row = self._adj[iv]
+            with self._lock:
+                row = self._overlay.get(iv)
+                if row is None:
+                    return self._adj[iv, :self.deg[iv]].copy()
         return row[:self.deg[iv]]
 
 
@@ -431,6 +455,12 @@ class DynamicGraph:
         self._device: Optional[DeviceGraphState] = None
         self._snapshots: "weakref.WeakSet[HostGraphSnapshot]" = \
             weakref.WeakSet()
+        # shared with every HostGraphSnapshot: serializes the delta thread's
+        # shield-then-overwrite against concurrent snapshot row reads
+        self._row_lock = threading.Lock()
+        # a StreamSession installs its lease-aware donation policy here;
+        # a bare DynamicGraph falls back to "any live snapshot vetoes"
+        self._donation_guard = None
 
     # ------------------------------------------------------------------
     # construction
@@ -478,6 +508,23 @@ class DynamicGraph:
         state (device buffer donation must then be off — see
         ``_update_fns``)."""
         return len(self._snapshots) > 0
+
+    def snapshots(self) -> Tuple[HostGraphSnapshot, ...]:
+        """The currently live (weakly tracked) host snapshots."""
+        return tuple(self._snapshots)
+
+    def donate_ok(self) -> bool:
+        """May the next device update donate the published buffers?
+
+        A :class:`~repro.stream.session.StreamSession` installs a guard
+        that tracks serving read-leases and stale views, so donation
+        re-engages whenever only the session's own published view is
+        alive and nobody is reading it. Without a guard, any live host
+        snapshot vetoes donation (the conservative standalone default).
+        """
+        if self._donation_guard is not None:
+            return bool(self._donation_guard())
+        return not self.pinned
 
     def host_snapshot(self) -> HostGraphSnapshot:
         """Capture a frozen host view of the current version.
@@ -636,9 +683,14 @@ class DynamicGraph:
             row = np.repeat(np.searchsorted(touched, verts), counts)
             col = np.arange(src.size) - np.repeat(start, counts)
             rows_new[row, col] = dst
-        self._shield_snapshots(touched)
-        self.adj[touched] = rows_new
-        self.deg = new_deg.astype(np.int32)
+        # shield + overwrite are one critical section: a snapshot reader
+        # that misses the overlay and falls through to the live row must
+        # never observe the row post-overwrite (HostGraphSnapshot.neighbors
+        # takes the same lock)
+        with self._row_lock:
+            self._shield_snapshots(touched)
+            self.adj[touched] = rows_new
+            self.deg = new_deg.astype(np.int32)
         delta = DeltaResult(ins_uv, del_uv, touched, dirty, self.version)
         if self._device is not None:
             self._device.apply_delta(self, delta, del_pos, old_deg_touched,

@@ -161,7 +161,9 @@ class BatchedQueryServer:
                       thread would otherwise outrun — and, through the GIL
                       plus lock convoy, starve — the worker, growing the
                       queue without bound so every answer lands at the
-                      final drain.
+                      final drain. A full backlog is itself a flush trigger
+                      for the worker, so submits can never block forever
+                      even with no other admission policy configured.
     """
 
     def __init__(self, stream: StreamSession, min_batch: int = 64,
@@ -464,13 +466,20 @@ class BatchedQueryServer:
         """Admission decision under ``_lock``: ``(due_now, wait_timeout)``.
 
         Due when the queue reached ``max_batch``, the oldest request aged
-        past ``max_wait_s``, or the earliest SLO deadline leaves less slack
-        than one smoothed flush service time. Otherwise returns how long the
+        past ``max_wait_s``, the earliest SLO deadline leaves less slack
+        than one smoothed flush service time, or (async mode) the queue hit
+        the ``max_backlog`` high-water mark. Otherwise returns how long the
         worker may sleep before the earliest of those can trip.
         """
         if not self._queue:
             return False, None
         if self.max_batch is not None and len(self._queue) >= self.max_batch:
+            return True, None
+        if self._worker is not None and len(self._queue) >= self.max_backlog:
+            # a full backlog must always drain: with no max_batch /
+            # max_wait_s and deadline-free submits nothing else ever comes
+            # due, and the submitter blocked on the backpressure loop
+            # cannot rescue itself with an explicit flush()
             return True, None
         now = time.perf_counter()
         timeouts = []
@@ -528,7 +537,14 @@ class BatchedQueryServer:
             queue.sort(key=_edf_key)        # earliest-deadline-first
             t0 = time.perf_counter()
             with trace.span("server.flush") as fsp:
-                self._flush_body(queue, fsp)
+                # read lease: pins the captured view against device-buffer
+                # donation for the whole flush (a delta landing meanwhile
+                # builds version N+1 without donating version N's buffers)
+                snap = self.stream.acquire_serving_view()
+                try:
+                    self._flush_body(queue, snap, fsp)
+                finally:
+                    self.stream.release_serving_view(snap)
             dt = time.perf_counter() - t0
             # smoothed service-time estimate drives the worker's
             # deadline-pressure check (how early must a flush start so its
@@ -538,15 +554,15 @@ class BatchedQueryServer:
         with self._cond:
             self._cond.notify_all()          # wake poll()/flush() waiters
 
-    def _flush_body(self, queue: List[_Pending], fsp) -> None:
+    def _flush_body(self, queue: List[_Pending], snap, fsp) -> None:
         """The traced body of :meth:`_flush_queue` (``fsp`` is its span).
 
-        Snapshot-isolated: captures one published ServingView up front and
-        reads *nothing* from the live session afterwards — deltas applied
-        concurrently publish later views and cannot tear this flush.
+        Snapshot-isolated: ``snap`` is one lease-held published ServingView
+        captured by the caller, and the body reads *nothing* from the live
+        session — deltas applied concurrently publish later views and
+        cannot tear this flush.
         """
         self._c_flushes.inc()
-        snap = self.stream.serving_view()
         sess = snap.session
         host = snap.host
         version = snap.version

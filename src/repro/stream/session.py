@@ -112,6 +112,16 @@ class StreamSession:
         self._mutate_lock = threading.RLock()
         self._serving = ServingView(0, 0, self.session, sketch,
                                     dyn.host_snapshot())
+        # donation gating: device-buffer donation is safe only when provably
+        # nobody reads the published generation. Flushes take a read lease
+        # (acquire_serving_view/release_serving_view); a delta that did
+        # engage donation sets _donating, blocking new leases until the
+        # next view publishes. The guard lives on the graph so the device
+        # update consults it at the moment it picks its kernels.
+        self._view_cond = threading.Condition(threading.Lock())
+        self._read_leases = 0
+        self._donating = False
+        dyn._donation_guard = self._device_donate_ok
 
     # ------------------------------------------------------------------
     # mutation
@@ -132,9 +142,61 @@ class StreamSession:
 
         Flushes capture this once and serve everything from it — a delta
         landing mid-flush builds and publishes the *next* view without
-        disturbing the captured one.
+        disturbing the captured one. Concurrent readers that touch device
+        state should prefer :meth:`acquire_serving_view`, whose lease also
+        keeps buffer donation off while they read.
         """
         return self._serving
+
+    def acquire_serving_view(self) -> ServingView:
+        """Capture the published view under a read lease.
+
+        The lease is what makes device-buffer donation safe to keep
+        enabled: while any lease is out, ``apply_delta`` builds the next
+        device generation *without* donating the published one; and when a
+        delta did engage donation (no lease was out), acquisition blocks
+        until the next view publishes — the old generation's buffers are
+        already condemned. Always pair with :meth:`release_serving_view`.
+        """
+        with self._view_cond:
+            while self._donating:
+                self._view_cond.wait()
+            self._read_leases += 1
+            return self._serving
+
+    def release_serving_view(self, view: Optional[ServingView] = None) -> None:
+        """Release one :meth:`acquire_serving_view` lease (``view`` is
+        accepted for call-site symmetry; leases are a plain count)."""
+        with self._view_cond:
+            self._read_leases = max(self._read_leases - 1, 0)
+
+    def _device_donate_ok(self) -> bool:
+        """Donation policy installed on ``dyn`` (see ``donate_ok``).
+
+        Donating the published device buffers invalidates them for every
+        holder of the current (or an earlier) ServingView, so it is
+        allowed only when provably nobody reads one: no serving lease is
+        out, and no host snapshot other than the published view's own is
+        alive (a stale view still in flight keeps its snapshot alive,
+        which is exactly the veto we want). Engaging donation sets
+        ``_donating``, which blocks new leases until the delta publishes.
+        """
+        with self._view_cond:
+            if self._read_leases:
+                return False
+            published = self._serving.host
+            if any(s is not published for s in self.dyn.snapshots()):
+                return False
+            self._donating = True
+            return True
+
+    def _end_donation(self) -> None:
+        """Re-admit serving-view leases after a donating delta publishes
+        (also the exception-path unblocker — see ``apply_delta``)."""
+        with self._view_cond:
+            if self._donating:
+                self._donating = False
+                self._view_cond.notify_all()
 
     def add_delta_listener(self, fn) -> None:
         """Subscribe ``fn(vertices, epoch)`` to the invalidation feed.
@@ -165,11 +227,14 @@ class StreamSession:
     def _publish_view(self) -> None:
         """Atomically publish the post-mutation state as the serving view
         (callers hold ``_mutate_lock`` and have already fired the
-        invalidation feed)."""
+        invalidation feed). Publication also ends any donation window the
+        delta opened: the new view's buffers are valid, so blocked
+        :meth:`acquire_serving_view` callers may proceed."""
         self._serving = ServingView(
             self.version, self._serving.epoch + 1, self.session,
             self.maintainer.sketch if self.maintainer else None,
             self.dyn.host_snapshot())
+        self._end_donation()
 
     def _device_carry(self, carry_host: Optional[np.ndarray],
                       identity: bool) -> Optional[DeviceCarry]:
@@ -197,57 +262,67 @@ class StreamSession:
         the exact host → device traffic, proportional to the delta size.
         """
         with trace.span("stream.apply_delta") as sp, self._mutate_lock:
-            old_keys = self.dyn.edge_keys
-            self.dyn.traffic.begin_delta()
-            delta = self.dyn.apply_delta(inserts, deletes)
-            rebuilt = (self.maintainer.apply(delta)
-                       if self.maintainer else np.zeros(0, np.int64))
-            self.version += 1
-            rec = car = 0
-            if not (delta.is_noop and rebuilt.size == 0):
-                self.dyn.traffic.commit_step()  # noop deltas stay unmetered
-                graph = self.dyn.view()
-                # a row rebuilt this delta may have gone dirty at an
-                # *earlier* delta (policy deferral), so invalidation covers
-                # touched ∪ rebuilt
-                invalid = np.union1d(delta.touched, rebuilt)
-                carry = self._device_carry(
-                    self.dyn.carry_index(old_keys, invalid),
-                    identity=delta.is_noop)  # noop delta ran no edge splice
-                # fork-refresh-publish: the live session keeps serving the
-                # previous version while the fork absorbs the delta; the
-                # swap below is the version-N+1 publication point
-                new_session = self.session.fork()
-                recomputed = new_session.refresh(
-                    graph,
-                    self.maintainer.sketch if self.maintainer else None,
-                    carry)
-                # refresh returns None when it dropped the cache (nothing
-                # carried; the full pass happens lazily) — no savings counted
-                rec = 0 if recomputed is None else recomputed
-                car = 0 if recomputed is None else max(graph.m - recomputed, 0)
-                self.cards_recomputed += rec
-                self.cards_carried += car
-                # invalidation completes BEFORE publication: once a flush
-                # can capture the new view, every stale cache entry is gone
-                self._publish_invalid(invalid, self._serving.epoch + 1)
-                self.session = new_session
-            self._publish_view()
-            if self.maintainer is not None:
-                accuracy.record_maintenance(self.maintainer.stats(),
-                                            self.metrics)
-            info = {
-                "version": self.version,
-                "inserted": int(delta.inserted.shape[0]),
-                "deleted": int(delta.deleted.shape[0]),
-                "touched": int(delta.touched.shape[0]),
-                "rows_rebuilt_now": int(rebuilt.size),
-                "cards_recomputed": rec,
-                "cards_carried": car,
-                "bytes_uploaded": self.dyn.traffic.bytes_delta,
-            }
-            sp.set(**info)
-            return info
+            try:
+                return self._apply_delta_locked(inserts, deletes, sp)
+            finally:
+                # normally a no-op (publication ended the donation window);
+                # on an exception after the device update donated, this is
+                # what unblocks lease acquirers waiting on the window
+                self._end_donation()
+
+    def _apply_delta_locked(self, inserts, deletes, sp) -> dict:
+        """The body of :meth:`apply_delta` (mutation lock held)."""
+        old_keys = self.dyn.edge_keys
+        self.dyn.traffic.begin_delta()
+        delta = self.dyn.apply_delta(inserts, deletes)
+        rebuilt = (self.maintainer.apply(delta)
+                   if self.maintainer else np.zeros(0, np.int64))
+        self.version += 1
+        rec = car = 0
+        if not (delta.is_noop and rebuilt.size == 0):
+            self.dyn.traffic.commit_step()  # noop deltas stay unmetered
+            graph = self.dyn.view()
+            # a row rebuilt this delta may have gone dirty at an
+            # *earlier* delta (policy deferral), so invalidation covers
+            # touched ∪ rebuilt
+            invalid = np.union1d(delta.touched, rebuilt)
+            carry = self._device_carry(
+                self.dyn.carry_index(old_keys, invalid),
+                identity=delta.is_noop)  # noop delta ran no edge splice
+            # fork-refresh-publish: the live session keeps serving the
+            # previous version while the fork absorbs the delta; the
+            # swap below is the version-N+1 publication point
+            new_session = self.session.fork()
+            recomputed = new_session.refresh(
+                graph,
+                self.maintainer.sketch if self.maintainer else None,
+                carry)
+            # refresh returns None when it dropped the cache (nothing
+            # carried; the full pass happens lazily) — no savings counted
+            rec = 0 if recomputed is None else recomputed
+            car = 0 if recomputed is None else max(graph.m - recomputed, 0)
+            self.cards_recomputed += rec
+            self.cards_carried += car
+            # invalidation completes BEFORE publication: once a flush
+            # can capture the new view, every stale cache entry is gone
+            self._publish_invalid(invalid, self._serving.epoch + 1)
+            self.session = new_session
+        self._publish_view()
+        if self.maintainer is not None:
+            accuracy.record_maintenance(self.maintainer.stats(),
+                                        self.metrics)
+        info = {
+            "version": self.version,
+            "inserted": int(delta.inserted.shape[0]),
+            "deleted": int(delta.deleted.shape[0]),
+            "touched": int(delta.touched.shape[0]),
+            "rows_rebuilt_now": int(rebuilt.size),
+            "cards_recomputed": rec,
+            "cards_carried": car,
+            "bytes_uploaded": self.dyn.traffic.bytes_delta,
+        }
+        sp.set(**info)
+        return info
 
     def flush(self) -> int:
         """Force-rebuild all dirty sketch rows and refresh their edges —

@@ -63,6 +63,85 @@ def test_serving_view_is_isolated_from_later_deltas():
     assert v1.host.m == st.dyn.m and v0.host.m != v1.host.m
 
 
+def test_snapshot_neighbors_returns_stable_copies():
+    # live-row reads copy under the row lock: the returned array must not
+    # alias the mutable adjacency, and must survive a later delta intact
+    st = _session()
+    snap = st.serving_view().host
+    v = int(np.argmax(st.dyn.deg))
+    nbrs = snap.neighbors(v)
+    before = nbrs.copy()
+    assert not np.shares_memory(nbrs, st.dyn.adj)
+    absent = [u for u in range(st.dyn.n)
+              if u != v and u not in set(before.tolist())][:2]
+    st.apply_delta([[v, u] for u in absent])
+    assert int(st.dyn.deg[v]) == before.size + len(absent)
+    np.testing.assert_array_equal(nbrs, before)
+    np.testing.assert_array_equal(snap.neighbors(v), before)
+
+
+def test_snapshot_neighbors_race_with_concurrent_deltas():
+    """Hammer a version-0 snapshot's neighbors() from reader threads while
+    deltas (inserts AND deletes, so rows shrink and grow) land from the
+    main thread: every read must equal the version-0 truth — the TOCTOU
+    window between the overlay probe and the live-row read is closed by
+    the shared row lock."""
+    n = 50
+    st = _session(seed=9, n=n, p=0.12)
+    snap = st.serving_view().host
+    truth = {v: snap.neighbors(v).copy() for v in range(n)}
+    stop = threading.Event()
+    errs = []
+
+    def read_loop(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                v = int(rng.integers(0, n))
+                got = snap.neighbors(v)
+                if not np.array_equal(got, truth[v]):
+                    errs.append((v, got.copy(), truth[v]))
+                    return
+        except Exception as exc:    # pragma: no cover - the failure signal
+            errs.append(exc)
+
+    readers = [threading.Thread(target=read_loop, args=(s,))
+               for s in range(2)]
+    for t in readers:
+        t.start()
+    rng = np.random.default_rng(1)
+    try:
+        for _ in range(30):
+            e = rng.integers(0, n, size=(8, 2)).astype(np.int64)
+            e = e[e[:, 0] != e[:, 1]]
+            st.apply_delta(e[2:], e[:2])
+    finally:
+        stop.set()
+        for t in readers:
+            t.join()
+    assert not errs, f"snapshot read diverged from version 0: {errs[:1]}"
+
+
+def test_donation_guard_tracks_leases_and_stale_views():
+    st = _session()
+    # steady state: only the published view's snapshot is alive and no
+    # lease is out, so the streaming session may donate device buffers
+    assert st._device_donate_ok()
+    st._end_donation()              # reset the window the check opened
+    view = st.acquire_serving_view()
+    try:
+        assert not st._device_donate_ok()      # lease out: no donation
+    finally:
+        st.release_serving_view(view)
+    old = st.serving_view()
+    st.apply_delta([[0, 1], [0, 2]])
+    # a stale view still alive vetoes donation; dropping it re-enables
+    assert not st._device_donate_ok()
+    del old, view
+    assert st._device_donate_ok()
+    st._end_donation()
+
+
 def test_noop_delta_still_publishes_a_view():
     st = _session()
     e0 = st.serving_view().epoch
@@ -130,6 +209,36 @@ def test_async_backpressure_bounds_the_queue():
         assert srv.metrics.counter("server_backpressure_total").value > 0
     finally:
         srv.close()
+
+
+def test_async_backlog_alone_triggers_flush_no_submit_hang():
+    """With no max_batch, no max_wait_s and deadline-free submits, the
+    only admission trigger left is the backlog high-water mark itself —
+    a submitter blocked on backpressure must be rescued by the worker
+    flushing, never stuck forever (it cannot call flush() while blocked)."""
+    st = _session()
+    srv = BatchedQueryServer(st, min_batch=8, async_flush=True,
+                             max_backlog=4)
+    rids = []
+    done = threading.Event()
+
+    def submit_all():
+        for i in range(12):                 # 3x the high-water mark
+            rids.append(srv.submit_membership(
+                i % st.dyn.n, np.arange(4, dtype=np.int32)))
+        done.set()
+
+    t = threading.Thread(target=submit_all, daemon=True)
+    try:
+        t.start()
+        t.join(60.0)
+        assert done.is_set(), "submits blocked forever at max_backlog"
+        out = srv.flush()
+        out.update(_wait_results(srv, len(rids) - len(out)))
+        assert set(out) == set(rids)
+    finally:
+        srv.close()
+        t.join(5.0)
 
 
 def test_async_flush_and_poll_keep_contracts():
