@@ -9,6 +9,14 @@ Rows (``name,us_per_call,derived``):
   * ``localcluster/e2e_*``       — full push+sweep, with seeds/sec and the
                                    sketch-vs-exact accuracy of the best
                                    conductance (mean |Δφ| over the batch).
+  * ``localcluster/push_dense_s12`` / ``push_sparse_s12`` /
+    ``e2e_sparse_s12``           — dense-vs-sparse frontier phase at scale
+                                   12: peak residual-buffer bytes per path
+                                   (dense ``[S, n]`` vs capped ``[S, cap]``,
+                                   ratio asserted ≥ 10x), seeds/sec, and the
+                                   equivalence checks (no spill, sweep
+                                   profiles bit-identical on the shared
+                                   support, mean |Δφ| ≈ 0).
 
 The sketch path's win grows with degree skew: the exact sweep pays d_max per
 step, the filter pays a fixed word count (the ProbGraph trade applied to the
@@ -28,6 +36,13 @@ SCALE = 10
 SEEDS = 8
 ALPHA = 0.15
 EPS = 1e-4
+
+# sparse-frontier phase: large enough that dense [S, n] residuals dwarf the
+# capped buffers (cap = pow2(1/(ALPHA·EPS_SPARSE)) = 256 vs n = 4096), eps
+# loose enough that the support provably fits the cap (no spill)
+SCALE_SPARSE = 12
+SEEDS_SPARSE = 8
+EPS_SPARSE = 3e-2
 
 
 def run() -> None:
@@ -70,3 +85,57 @@ def run() -> None:
     emit("localcluster/e2e_bf", us_e2e,
          f"seeds_per_s={SEEDS / (us_e2e / 1e6):.0f},mean_dphi={dphi:.4f},"
          f"bound_last={half[-1]:.3f}")
+
+    _sparse_phase()
+
+
+def _sparse_phase() -> None:
+    """Dense-vs-sparse frontier rows at scale ≥ 12 (see module docstring).
+
+    Asserts the phase's claims instead of just printing them: the capped
+    buffers undercut the dense residuals by ≥ 10x, the sparse path did not
+    spill, and the two sweep profiles are bit-identical on the shared
+    support — so a regression in the sparse push fails the nightly bench
+    run, not just a dashboard.
+    """
+    g = G.kronecker(SCALE_SPARSE, 6, seed=2)
+    rng = np.random.default_rng(5)
+    seeds = rng.integers(0, g.n, size=SEEDS_SPARSE).astype(np.int32)
+    plan_d = ENG.plan_for(g, frontier_mode="dense")
+    plan_s = ENG.plan_for(g, frontier_mode="sparse")
+
+    p, r, _ = LC.ppr_push(g, seeds, ALPHA, EPS_SPARSE)
+    us_d = timeit(lambda: LC.ppr_push(g, seeds, ALPHA, EPS_SPARSE)[0])
+    dense_bytes = p.nbytes + r.nbytes
+    emit("localcluster/push_dense_s12", us_d,
+         f"n={g.n},seeds={SEEDS_SPARSE},res_bytes={dense_bytes}")
+
+    fr = LC.ppr_push_sparse(g, seeds, ALPHA, EPS_SPARSE)
+    assert not bool(fr.overflowed), "sparse phase spilled; retune EPS_SPARSE"
+    us_s = timeit(lambda: LC.ppr_push_sparse(g, seeds, ALPHA, EPS_SPARSE).p)
+    sparse_bytes = fr.idx.nbytes + fr.p.nbytes + fr.r.nbytes
+    ratio = dense_bytes / sparse_bytes
+    assert ratio >= 10.0, f"memory ratio {ratio:.1f}x below the 10x floor"
+    emit("localcluster/push_sparse_s12", us_s,
+         f"cap={fr.cap},res_bytes={sparse_bytes},mem_ratio={ratio:.1f}x,"
+         f"seeds_per_s={SEEDS_SPARSE / (us_s / 1e6):.0f}")
+
+    res_d = LC.local_cluster(g, seeds, ALPHA, EPS_SPARSE, None, plan_d)
+    res_s = LC.local_cluster(g, seeds, ALPHA, EPS_SPARSE, None, plan_s)
+    us_e2e = timeit(
+        lambda: LC.local_cluster(g, seeds, ALPHA, EPS_SPARSE, None,
+                                 plan_s).conductance)
+    k = min(res_d.order.shape[1], res_s.order.shape[1])
+    ord_d, ord_s = np.asarray(res_d.order)[:, :k], np.asarray(res_s.order)[:, :k]
+    phi_d = np.asarray(res_d.conductance)[:, :k]
+    phi_s = np.asarray(res_s.conductance)[:, :k]
+    shared = ord_d == ord_s
+    assert np.array_equal(phi_d[shared], phi_s[shared]), \
+        "sparse sweep profile diverged from dense on the shared support"
+    bd, bs = np.asarray(res_d.best_conductance), \
+        np.asarray(res_s.best_conductance)
+    ok = np.isfinite(bd) & np.isfinite(bs)
+    dphi = float(np.mean(np.abs(bd[ok] - bs[ok]))) if ok.any() else 0.0
+    emit("localcluster/e2e_sparse_s12", us_e2e,
+         f"seeds_per_s={SEEDS_SPARSE / (us_e2e / 1e6):.0f},"
+         f"mean_dphi={dphi:.4f},shared_frac={shared.mean():.3f}")

@@ -6,13 +6,30 @@ find low-conductance clusters around them without touching the whole graph's
 combinatorics. Two phases, both expressed as the regular batched tensor work
 the engine already emits:
 
-  1. **Forward push** — approximate personalized PageRank. The frontier is a
-     dense float vector per seed (``r`` residual, ``p`` estimate, both
-     ``[S, n]`` for a seed batch), and one synchronous push step activates
-     *every* vertex over the ACL threshold at once: mass moves to ``p``
-     (teleport share ``alpha``) and propagates to neighbors through an
-     edge-parallel scatter-add over ``graph.edges`` — no per-vertex host
-     loop, no ragged frontier, one `lax.while_loop`.
+  1. **Forward push** — approximate personalized PageRank, in one of two
+     frontier layouts selected by ``plan.frontier_mode``:
+
+     * **dense** — ``r`` residual and ``p`` estimate as ``[S, n]`` float
+       tensors; one synchronous push step activates *every* vertex over the
+       ACL threshold at once and propagates mass through an edge-parallel
+       scatter-add over ``graph.edges``. Simple and fast while ``[S, n]``
+       fits, fatal at web scale.
+     * **sparse** — the Shun et al. frontier-sparse formulation: each seed's
+       support lives in a capped ``[S, cap]`` index+value table (``idx``
+       ascending vertex ids padded with the sentinel ``n``, plus ``p``/``r``
+       values), with ``cap = O(1/(alpha·eps))`` from the ACL work bound,
+       pow2-bucketed so ragged (alpha, eps) choices reuse compiles. A push
+       round gathers the active rows' padded adjacency, then merges table
+       and neighbor contributions with one stable sort-by-id + segment
+       scatter-add — memory scales with the support, never ``n``. If a
+       round ever produces more than ``cap`` distinct support vertices the
+       whole batch *spills*: the overflow flag aborts the loop and the
+       caller re-runs the dense push. Spill is a performance event, never a
+       correctness event (invariant 10 in docs/ARCHITECTURE.md).
+
+     Both layouts implement the same synchronous ACL dynamics, so they agree
+     within float associativity (and exactly on support/sweep order in
+     practice); every consumer downstream of the push sees one result type.
 
   2. **Sweep cut** — order vertices by degree-normalized PPR mass and scan
      prefixes ``S_1 ⊂ S_2 ⊂ …``, picking the prefix with minimum conductance
@@ -34,15 +51,71 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ... import engine as eng
+from ...obs import metrics as obs_metrics
+from ...obs import trace
 from ..estimators import bf_intersection_and_from_ones
 from ..graph import Graph
 from ..sketches import SketchSet, bloom_rows
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseFrontier:
+    """Capped per-seed PPR support: the sparse push's index+value buffers.
+
+    Each seed's support is a row of ``cap`` slots holding ascending vertex
+    ids (``idx``; unused slots carry the sentinel ``n``) with the matching
+    PPR estimate ``p`` and residual ``r`` values. Memory is ``O(S · cap)``
+    with ``cap = O(1/(alpha·eps))`` — independent of ``n``.
+
+    Attributes:
+      idx: int32[S, cap]   support vertex ids, ascending per row; pad = n.
+      p:   float32[S, cap] PPR estimates aligned with ``idx``.
+      r:   float32[S, cap] final residuals aligned with ``idx``.
+      iterations: int32    push rounds executed.
+      overflowed: bool[]   True when some round needed more than ``cap``
+                           distinct support vertices — the buffers are then
+                           truncated mid-round and MUST NOT be consumed;
+                           callers re-run the dense push (a spill).
+      n: static int        vertex count (the id sentinel).
+    """
+
+    idx: jax.Array
+    p: jax.Array
+    r: jax.Array
+    iterations: jax.Array
+    overflowed: jax.Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def cap(self) -> int:
+        """Slots per seed (the pow2-bucketed frontier capacity)."""
+        return int(self.idx.shape[1])
+
+    def sizes(self):
+        """int64[S]: occupied slots (support size) per seed (host-side)."""
+        import numpy as np
+        return np.sum(np.asarray(self.idx) < self.n, axis=1).astype(np.int64)
+
+    def densify(self):
+        """Scatter back to dense ``(p, r)`` float32[S, n] (test/debug aid —
+        materializes exactly what the dense push would have produced, up to
+        float summation order)."""
+        s_batch = self.idx.shape[0]
+        rows = jnp.arange(s_batch)[:, None]
+        # width n+1 gives sentinel ids a scratch column sliced away below
+        p = jnp.zeros((s_batch, self.n + 1), jnp.float32)
+        r = jnp.zeros((s_batch, self.n + 1), jnp.float32)
+        p = p.at[rows, self.idx].add(self.p, mode="drop")
+        r = r.at[rows, self.idx].add(self.r, mode="drop")
+        return p[:, :self.n], r[:, :self.n]
 
 
 @jax.tree_util.register_dataclass
@@ -65,11 +138,18 @@ class LocalClusterResult:
                                  then empty.
       support:     int32[S]      number of vertices with positive PPR mass
                                  that entered the sweep (≤ k).
-      ppr:         float32[S, n] the approximate PPR vectors (push output).
-      residual:    float32[S, n] the final push residuals (the truncated
-                                 mass; nonzero only on neighbors of the
-                                 pushed support).
+      ppr:         float32[S, n] the approximate PPR vectors (dense push
+                                 output; ``None`` on the sparse path, where
+                                 the same data lives in ``frontier``).
+      residual:    float32[S, n] the final push residuals (dense path only;
+                                 ``None`` on the sparse path).
+      frontier:    the :class:`SparseFrontier` buffers (sparse path only;
+                                 ``None`` on the dense path).
       iterations:  int32         push iterations until convergence/cap.
+      spilled:     static bool   True when the sparse push overflowed its
+                                 cap and the answer was recomputed densely —
+                                 a performance event, never a correctness
+                                 event.
     """
 
     order: jax.Array
@@ -78,9 +158,12 @@ class LocalClusterResult:
     best_conductance: jax.Array
     best_size: jax.Array
     support: jax.Array
-    ppr: jax.Array
-    residual: jax.Array
+    ppr: Optional[jax.Array]
+    residual: Optional[jax.Array]
     iterations: jax.Array
+    frontier: Optional[SparseFrontier] = None
+    spilled: bool = dataclasses.field(default=False,
+                                      metadata=dict(static=True))
 
     def members(self, s: int):
         """Vertex ids of seed ``s``'s best cluster (host-side convenience)."""
@@ -98,9 +181,17 @@ class LocalClusterResult:
         the sweep reads only rows/degrees of the swept support — a subset.
         This is the serving-tier cache's invalidation set; conductance
         additionally depends on the total volume ``2m``, which the cache
-        guards separately (see ``stream.cache``).
+        guards separately (see ``stream.cache``). On the sparse path the
+        set falls out of the index buffer directly (already id-sorted), so
+        footprints cost ``O(cap)`` instead of an ``O(n)`` dense scan.
         """
         import numpy as np
+        if self.frontier is not None:
+            idx = np.asarray(self.frontier.idx[s])
+            p = np.asarray(self.frontier.p[s])
+            r = np.asarray(self.frontier.r[s])
+            keep = (idx < self.frontier.n) & ((p > 0) | (r > 0))
+            return idx[keep].astype(np.int64)
         p = np.asarray(self.ppr[s])
         r = np.asarray(self.residual[s])
         return np.nonzero((p > 0) | (r > 0))[0].astype(np.int64)
@@ -160,6 +251,25 @@ def _padded_edges(graph: Graph) -> jax.Array:
     return jnp.concatenate([graph.edges, pad], axis=0)
 
 
+def _padded_seeds(seeds: jax.Array):
+    """Pad a seed batch to its pow2 bucket by repeating the first seed.
+
+    Push rows are fully independent (per-row state, per-row updates), and
+    the loop's stop condition is a max over rows, so duplicating an existing
+    row changes neither the surviving rows' values nor the iteration count —
+    slicing the pad rows off afterwards is bit-identical to running the
+    ragged batch. This bounds XLA recompiles to one per (n, edge-bucket,
+    seed-bucket) class instead of one per distinct ragged batch size.
+    """
+    s = seeds.shape[0]
+    s_b = eng.plan.pow2_bucket(s)
+    if s_b == s:
+        return seeds, s
+    fill = seeds[0] if s else jnp.int32(0)
+    pad = jnp.full((s_b - s,), fill, seeds.dtype)
+    return jnp.concatenate([seeds, pad]), s
+
+
 def ppr_push(graph: Graph, seeds: jax.Array, alpha: float = 0.15,
              eps: float = 1e-4, max_iters: int = 200):
     """Batched ACL forward push: approximate PPR for a batch of seeds.
@@ -179,15 +289,171 @@ def ppr_push(graph: Graph, seeds: jax.Array, alpha: float = 0.15,
       float32[S, n], and the int32 number of rounds executed. The ACL
       invariant bounds the truncation: ``p ≤ ppr_exact ≤ p + eps·deg``
       coordinatewise (in exact arithmetic). The implementation is jitted
-      with ``alpha``/``eps`` as traced scalars and the edge list padded to a
-      pow2 bucket, so repeated serving calls — including across streaming
-      deltas, where ``m`` changes every batch — reuse one compiled program
-      per (n, edge-bucket, seed-batch) class.
+      with ``alpha``/``eps`` as traced scalars and both the edge list and
+      the seed batch padded to pow2 buckets, so repeated serving calls —
+      including across streaming deltas, where ``m`` changes every batch,
+      and ragged ad-hoc seed batches — reuse one compiled program per
+      (n, edge-bucket, seed-bucket) class.
     """
     seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
-    return _ppr_push_impl(graph.deg, _padded_edges(graph), seeds,
-                          jnp.float32(alpha), jnp.float32(eps),
-                          n=graph.n, max_iters=max_iters)
+    seeds_b, s = _padded_seeds(seeds)
+    p, r, iters = _ppr_push_impl(graph.deg, _padded_edges(graph), seeds_b,
+                                 jnp.float32(alpha), jnp.float32(eps),
+                                 n=graph.n, max_iters=max_iters)
+    return p[:s], r[:s], iters
+
+
+# ----------------------------------------------------------------------------
+# phase 1 (sparse): capped-frontier push — memory O(S/(alpha·eps)), not O(S·n)
+# ----------------------------------------------------------------------------
+
+# auto mode only goes sparse when the capped buffers undercut the dense
+# [S, n] tensors by at least this factor — below that, the dense push's
+# simpler rounds win and nothing is at risk of spilling
+_AUTO_SPARSE_FACTOR = 8
+
+
+def frontier_cap_for(alpha: float, eps: float, n: int,
+                     override: Optional[int] = None) -> int:
+    """Sparse-frontier capacity: pow2 bucket of the ACL support bound.
+
+    The push performs at most ``1/(alpha·eps)`` pushes total (each push on
+    ``v`` retires ``≥ alpha·eps·d(v)`` residual mass from an invariant total
+    of 1), so the support it can ever touch is ``O(1/(alpha·eps))`` —
+    independent of ``n``. The bucket is clamped to ``pow2(n)`` (a cap above
+    that buys nothing) and to ≥ 2 so the degenerate single-slot table never
+    compiles. ``override`` (``plan.frontier_cap``) replaces the bound but is
+    bucketed the same way; undersizing only risks a spill, never a wrong
+    answer.
+    """
+    if override is not None:
+        cap = int(override)
+    else:
+        cap = int(math.ceil(1.0 / (float(alpha) * float(eps))))
+    return min(eng.plan.pow2_bucket(cap, lo=2), eng.plan.pow2_bucket(n, lo=2))
+
+
+def resolve_frontier_mode(plan: eng.EnginePlan, n: int, alpha: float,
+                          eps: float) -> str:
+    """Dense-vs-sparse plan selection ("auto" resolves by cap-vs-n ratio)."""
+    mode = plan.frontier_mode
+    if mode not in ("auto", "dense", "sparse"):
+        raise ValueError(f"unknown frontier_mode: {mode!r}")
+    if mode != "auto":
+        return mode
+    cap = frontier_cap_for(alpha, eps, n, plan.frontier_cap)
+    return "sparse" if cap * _AUTO_SPARSE_FACTOR <= n else "dense"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "cap", "max_iters"))
+def _ppr_push_sparse_impl(deg: jax.Array, adj: jax.Array, seeds: jax.Array,
+                          alpha, eps, *, n: int, cap: int, max_iters: int):
+    """Jitted sparse push: per-seed ``[S, cap]`` id-sorted support tables.
+
+    One round: gather the active entries' padded adjacency rows, then merge
+    the table with the neighbor contributions via a stable sort by vertex id
+    + segment-head scatter-add (duplicate ids compact into one slot). Ids
+    stay ascending per row, so the table doubles as the sorted support set.
+    Overflow (> ``cap`` distinct ids after a merge) raises a flag that stops
+    the loop; the truncated buffers must then be discarded by the caller.
+    """
+    deg = deg.astype(jnp.float32)
+    s_batch = seeds.shape[0]
+    width = adj.shape[1]
+    rows = jnp.arange(s_batch)[:, None]
+
+    idx0 = jnp.full((s_batch, cap), n, jnp.int32).at[:, 0].set(seeds)
+    p0 = jnp.zeros((s_batch, cap), jnp.float32)
+    r0 = p0.at[:, 0].set(1.0)
+
+    def entry_deg(idx):
+        """Degrees of table entries; sentinel slots read as degree 0."""
+        return jnp.where(idx < n, jnp.take(deg, jnp.minimum(idx, n - 1)), 0.0)
+
+    def body(state):
+        idx, p, r, it, ovf = state
+        valid = idx < n
+        d = entry_deg(idx)
+        active = valid & (r >= eps * jnp.maximum(d, 1.0))
+        push = jnp.where(active, r, 0.0)
+        # isolated vertices (deg 0) absorb their whole mass into p
+        p = p + jnp.where(d > 0, alpha * push, push)
+        give = jnp.where(d > 0,
+                         (1.0 - alpha) * push / jnp.maximum(d, 1.0), 0.0)
+        r = jnp.where(active, 0.0, r)
+        # neighbor contributions of the active entries ([S, cap, W] gather;
+        # adjacency pad and inactive lanes park on the id sentinel n)
+        nbrs = jnp.take(adj, jnp.minimum(idx, n - 1), axis=0)
+        live = active[:, :, None] & (nbrs < n)
+        cand_id = jnp.where(live, nbrs, n).reshape(s_batch, cap * width)
+        cand_r = jnp.where(live, give[:, :, None],
+                           0.0).reshape(s_batch, cap * width)
+        # sort-merge: table ∪ candidates by id, compact duplicate ids into
+        # the segment head's slot via rank = cumsum(head) - 1
+        all_id = jnp.concatenate([idx, cand_id], axis=1)
+        all_p = jnp.concatenate([p, jnp.zeros_like(cand_r)], axis=1)
+        all_r = jnp.concatenate([r, cand_r], axis=1)
+        perm = jnp.argsort(all_id, axis=1, stable=True)
+        sid = jnp.take_along_axis(all_id, perm, axis=1)
+        sp = jnp.take_along_axis(all_p, perm, axis=1)
+        sr = jnp.take_along_axis(all_r, perm, axis=1)
+        svalid = sid < n
+        head = svalid & jnp.concatenate(
+            [jnp.ones((s_batch, 1), bool), sid[:, 1:] != sid[:, :-1]], axis=1)
+        rank = jnp.cumsum(head, axis=1) - 1
+        ovf = ovf | jnp.any(jnp.sum(head, axis=1) > cap)
+        rank = jnp.where(svalid, rank, cap)           # sentinels drop below
+        new_idx = jnp.full((s_batch, cap), n, jnp.int32).at[
+            rows, rank].min(sid, mode="drop")
+        new_p = jnp.zeros((s_batch, cap), jnp.float32).at[
+            rows, rank].add(sp, mode="drop")
+        new_r = jnp.zeros((s_batch, cap), jnp.float32).at[
+            rows, rank].add(sr, mode="drop")
+        return new_idx, new_p, new_r, it + 1, ovf
+
+    def cond(state):
+        idx, _, r, it, ovf = state
+        d = entry_deg(idx)
+        any_active = jnp.any((idx < n) & (r >= eps * jnp.maximum(d, 1.0)))
+        return any_active & (it < max_iters) & ~ovf
+
+    return jax.lax.while_loop(
+        cond, body, (idx0, p0, r0, jnp.int32(0), jnp.bool_(False)))
+
+
+def ppr_push_sparse(graph: Graph, seeds: jax.Array, alpha: float = 0.15,
+                    eps: float = 1e-4, max_iters: int = 200,
+                    frontier_cap: Optional[int] = None) -> SparseFrontier:
+    """Sparse-frontier ACL push: same dynamics as :func:`ppr_push`, memory
+    ``O(S · cap)`` with ``cap = O(1/(alpha·eps))`` instead of ``O(S · n)``.
+
+    Args:
+      graph:        frozen Graph or streaming view; reads ``deg``/``adj``.
+      seeds:        int32[S] seed vertex ids (pow2-padded internally).
+      alpha, eps:   ACL parameters (traced scalars — no retrace per value).
+      max_iters:    hard cap on synchronous push rounds.
+      frontier_cap: capacity override; ``None`` sizes from the ACL bound
+                    (see :func:`frontier_cap_for`).
+
+    Returns:
+      A :class:`SparseFrontier`. Check ``overflowed`` before consuming: a
+      True flag means the cap was exceeded mid-round and the buffers are
+      truncated — callers must fall back to the dense push (spill).
+    """
+    seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
+    seeds_b, s = _padded_seeds(seeds)
+    cap = frontier_cap_for(alpha, eps, graph.n, frontier_cap)
+    with trace.span("ppr.push", mode="sparse", n=int(graph.n), cap=int(cap),
+                    seeds=int(s)) as sp:
+        idx, p, r, iters, ovf = _ppr_push_sparse_impl(
+            graph.deg, graph.adj, seeds_b, jnp.float32(alpha),
+            jnp.float32(eps), n=graph.n, cap=cap, max_iters=max_iters)
+        fr = SparseFrontier(idx=idx[:s], p=p[:s], r=r[:s], iterations=iters,
+                            overflowed=ovf, n=graph.n)
+        size = int(fr.sizes().max()) if s else 0
+        sp.set(frontier_size=size, spilled=bool(fr.overflowed))
+        obs_metrics.REGISTRY.histogram("ppr.frontier_size").observe(size)
+    return fr
 
 
 def ppr_power_iteration(graph: Graph, seeds: jax.Array, alpha: float = 0.15,
@@ -302,21 +568,18 @@ def _prefix_intersections(deg: jax.Array, adj: jax.Array, n: int,
     return jnp.sum(before & valid, axis=-1).astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "plan"))
-def _sweep_cut_impl(deg: jax.Array, adj: jax.Array, ppr: jax.Array,
-                    vol_total: jax.Array, sketch: Optional[SketchSet],
-                    plan: eng.EnginePlan, *, n: int):
-    """Jitted sweep body over raw arrays; ``vol_total`` (= 2m) arrives as a
-    traced scalar so a streaming delta's changed edge count does not retrace
-    (the Graph pytree's static ``n_edges`` would)."""
-    deg = deg.astype(jnp.float32)
-    score = ppr / jnp.maximum(deg[None, :], 1.0)
-    k = max(1, min(int(plan.sweep_cap), n))
-    top_score, order = jax.lax.top_k(score, k)
-    in_sweep = top_score > 0.0                               # [S, k]
-    support = jnp.sum(in_sweep, axis=1).astype(jnp.int32)
-    order = jnp.where(in_sweep, order, n).astype(jnp.int32)  # pad -> sentinel
+def _sweep_scan(deg: jax.Array, adj: jax.Array, order: jax.Array,
+                in_sweep: jax.Array, vol_total: jax.Array,
+                sketch: Optional[SketchSet], plan: eng.EnginePlan, *, n: int):
+    """Conductance scan over an already-derived sweep order.
 
+    Shared verbatim by the dense and sparse sweep entries: given the same
+    ``(order, in_sweep)`` it reads only ``deg``/``adj``/``vol_total``, so the
+    two paths' conductance profiles are bit-identical whenever their orders
+    agree (invariant 10 — the frontier layout may perturb PPR values in the
+    last ulp, but never the profile arithmetic downstream of the order).
+    """
+    support = jnp.sum(in_sweep, axis=1).astype(jnp.int32)
     d_j = jnp.where(in_sweep, jnp.take(deg, jnp.minimum(order, n - 1)), 0.0)
     inter = jnp.where(
         in_sweep,
@@ -331,13 +594,59 @@ def _sweep_cut_impl(deg: jax.Array, adj: jax.Array, ppr: jax.Array,
     return order, conductance, support
 
 
-def sweep_cut(graph: Graph, ppr: jax.Array, sketch: Optional[SketchSet] = None,
+@functools.partial(jax.jit, static_argnames=("n", "plan"))
+def _sweep_cut_impl(deg: jax.Array, adj: jax.Array, ppr: jax.Array,
+                    vol_total: jax.Array, sketch: Optional[SketchSet],
+                    plan: eng.EnginePlan, *, n: int):
+    """Jitted dense sweep over raw arrays; ``vol_total`` (= 2m) arrives as a
+    traced scalar so a streaming delta's changed edge count does not retrace
+    (the Graph pytree's static ``n_edges`` would). ``top_k`` breaks score
+    ties by smallest vertex id — the sparse entry matches this exactly."""
+    deg = deg.astype(jnp.float32)
+    score = ppr / jnp.maximum(deg[None, :], 1.0)
+    k = max(1, min(int(plan.sweep_cap), n))
+    top_score, order = jax.lax.top_k(score, k)
+    in_sweep = top_score > 0.0                               # [S, k]
+    order = jnp.where(in_sweep, order, n).astype(jnp.int32)  # pad -> sentinel
+    return _sweep_scan(deg, adj, order, in_sweep, vol_total, sketch, plan,
+                       n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "plan"))
+def _sweep_cut_sparse_impl(deg: jax.Array, adj: jax.Array, idx: jax.Array,
+                           pval: jax.Array, vol_total: jax.Array,
+                           sketch: Optional[SketchSet],
+                           plan: eng.EnginePlan, *, n: int):
+    """Jitted sparse sweep: derive the order from the ``[S, cap]`` support
+    table instead of a dense ``[S, n]`` score tensor. The table is ascending
+    by vertex id, so ``top_k`` over slots breaks score ties by smallest id —
+    the same tie order the dense entry produces — and the shared scan then
+    yields bit-identical conductance profiles on agreeing orders."""
+    deg = deg.astype(jnp.float32)
+    cap = idx.shape[1]
+    valid = idx < n
+    d = jnp.where(valid, jnp.take(deg, jnp.minimum(idx, n - 1)), 1.0)
+    # invalid slots score -1 so they sort after every real (≥ 0) score
+    score = jnp.where(valid, pval / jnp.maximum(d, 1.0), -1.0)
+    k = max(1, min(int(plan.sweep_cap), cap, n))
+    top_score, pos = jax.lax.top_k(score, k)
+    order = jnp.take_along_axis(idx, pos, axis=1)
+    in_sweep = top_score > 0.0                               # [S, k]
+    order = jnp.where(in_sweep, order, n).astype(jnp.int32)  # pad -> sentinel
+    return _sweep_scan(deg, adj, order, in_sweep, vol_total, sketch, plan,
+                       n=n)
+
+
+def sweep_cut(graph: Graph, ppr, sketch: Optional[SketchSet] = None,
               plan: Optional[eng.EnginePlan] = None):
     """Batched sweep-cut conductance scan over degree-normalized PPR mass.
 
     Args:
       graph:  the graph the PPR vectors live on.
-      ppr:    float32[S, n] PPR estimates (from :func:`ppr_push`).
+      ppr:    float32[S, n] PPR estimates (from :func:`ppr_push`) or a
+              :class:`SparseFrontier` (from :func:`ppr_push_sparse`) — the
+              sparse form sweeps the support table directly and never
+              materializes an ``[S, n]`` tensor.
       sketch: optional SketchSet; a Bloom sketch routes the cut increments
               through prefix-filter AND+popcounts, anything else (or None)
               uses the exact rank-compare fallback.
@@ -351,6 +660,10 @@ def sweep_cut(graph: Graph, ppr: jax.Array, sketch: Optional[SketchSet] = None,
       int32[S] number of positive-mass vertices swept.
     """
     plan = plan if plan is not None else eng.plan_for(graph, sketch)
+    if isinstance(ppr, SparseFrontier):
+        return _sweep_cut_sparse_impl(graph.deg, graph.adj, ppr.idx, ppr.p,
+                                      jnp.float32(2.0 * graph.m), sketch,
+                                      plan, n=graph.n)
     return _sweep_cut_impl(graph.deg, graph.adj, ppr,
                            jnp.float32(2.0 * graph.m), sketch, plan,
                            n=graph.n)
@@ -369,17 +682,39 @@ def local_cluster(graph: Graph, seeds, alpha: float = 0.15, eps: float = 1e-4,
       eps:    push tolerance (smaller = larger support, better clusters).
       sketch: optional SketchSet for sketch-gated cut increments ("bf" kind
               engages the prefix-filter path; others fall back to exact).
-      plan:   EnginePlan or legacy kwargs (``sweep_cap=``, ``use_kernel=``).
+      plan:   EnginePlan or legacy kwargs (``sweep_cap=``, ``use_kernel=``,
+              ``frontier_mode=``, ``frontier_cap=``).
       max_iters: push round cap.
 
     Returns:
       A :class:`LocalClusterResult` with per-seed sweep order, conductance
-      profile, and the best (minimum-conductance) prefix.
+      profile, and the best (minimum-conductance) prefix. The push frontier
+      layout follows ``plan.frontier_mode``; a sparse-path overflow spills
+      to the dense push transparently (``result.spilled`` records it, the
+      ``ppr.spill`` counter counts it — slower, never wrong).
     """
     plan = eng.resolve_plan(plan, graph, sketch, kw)
     seeds = jnp.asarray(seeds, jnp.int32).reshape(-1)
-    p, r, iters = ppr_push(graph, seeds, alpha, eps, max_iters)
-    order, conductance, support = sweep_cut(graph, p, sketch, plan)
+    mode = resolve_frontier_mode(plan, graph.n, alpha, eps)
+    frontier = None
+    spilled = False
+    if mode == "sparse":
+        fr = ppr_push_sparse(graph, seeds, alpha, eps, max_iters,
+                             plan.frontier_cap)
+        if bool(fr.overflowed):
+            # spill: the cap was exceeded mid-round, the buffers are
+            # truncated — recompute densely (perf event, never correctness)
+            spilled = True
+            obs_metrics.REGISTRY.counter("ppr.spill").inc()
+        else:
+            frontier = fr
+    if frontier is not None:
+        p = r = None
+        iters = frontier.iterations
+        order, conductance, support = sweep_cut(graph, frontier, sketch, plan)
+    else:
+        p, r, iters = ppr_push(graph, seeds, alpha, eps, max_iters)
+        order, conductance, support = sweep_cut(graph, p, sketch, plan)
     best_idx = jnp.argmin(conductance, axis=1).astype(jnp.int32)
     best_phi = jnp.take_along_axis(conductance, best_idx[:, None],
                                    axis=1)[:, 0]
@@ -390,4 +725,4 @@ def local_cluster(graph: Graph, seeds, alpha: float = 0.15, eps: float = 1e-4,
         order=order, conductance=conductance, best_idx=best_idx,
         best_conductance=best_phi,
         best_size=best_size, support=support, ppr=p, residual=r,
-        iterations=iters)
+        iterations=iters, frontier=frontier, spilled=spilled)

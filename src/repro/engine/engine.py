@@ -37,7 +37,7 @@ from .plan import (EnginePlan, fold_edges, fold_edges_masked, map_edges,
 
 _PLAN_KWARGS = ("edge_chunk", "block_e", "block_w", "use_kernel",
                 "degree_order", "estimator", "variant", "shard_edges",
-                "sweep_cap")
+                "sweep_cap", "frontier_mode", "frontier_cap")
 
 
 def resolve_plan(plan: Optional[EnginePlan], graph: Graph,
@@ -396,17 +396,22 @@ class MiningSession:
           alpha: PPR teleport probability.
           eps:   push tolerance (residual threshold per unit degree).
           **kw:  forwarded to :func:`core.algorithms.localcluster.local_cluster`
-                 (e.g. ``max_iters=``).
+                 (e.g. ``max_iters=``, or plan overrides such as
+                 ``frontier_mode=`` / ``frontier_cap=``).
 
         Returns:
           A :class:`~repro.core.algorithms.localcluster.LocalClusterResult`
           with per-seed sweep order, conductance profile and best prefix.
+          The push frontier layout (dense ``[S, n]`` vs capped sparse
+          ``[S, cap]``) follows the session plan's ``frontier_mode``.
         """
         from ..core.algorithms.localcluster import local_cluster
         with trace.span("engine.local_cluster", alpha=float(alpha),
-                        eps=float(eps)):
-            return local_cluster(self.graph, seeds, alpha, eps, self.sketch,
-                                 plan=self.plan, **kw)
+                        eps=float(eps)) as sp:
+            res = local_cluster(self.graph, seeds, alpha, eps, self.sketch,
+                                plan=self.plan, **kw)
+            sp.set(sparse=res.frontier is not None, spilled=bool(res.spilled))
+            return res
 
     def edge_similarity(self, measure: str = "jaccard") -> jax.Array:
         """Similarity scores over graph.edges from the cached shared pass."""

@@ -37,6 +37,15 @@ class EnginePlan:
                     (see repro.distributed.sharding; no-op without a mesh).
       sweep_cap:    max swept prefix length for local clustering sweep cuts
                     (bounds the per-seed sweep tensor shapes).
+      frontier_mode: PPR push frontier layout — "dense" keeps the classic
+                    ``[S, n]`` residual tensors, "sparse" stores per-seed
+                    support in capped ``[S, cap]`` index+value buffers, and
+                    "auto" (default) picks sparse only when the cap implied
+                    by ``1/(alpha·eps)`` is far enough below ``n`` to pay.
+      frontier_cap: explicit sparse-frontier capacity override (entries per
+                    seed; pow2-bucketed). ``None`` sizes it from the ACL
+                    support bound ``O(1/(alpha·eps))``. Undersizing is safe:
+                    overflow spills to the dense push (slower, never wrong).
     """
 
     edge_chunk: int = 65536
@@ -48,6 +57,8 @@ class EnginePlan:
     variant: str = "union"
     shard_edges: bool = False
     sweep_cap: int = 512
+    frontier_mode: str = "auto"
+    frontier_cap: Optional[int] = None
 
     def with_(self, **overrides) -> "EnginePlan":
         """Return a copy of this plan with the given fields replaced."""

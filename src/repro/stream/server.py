@@ -680,6 +680,8 @@ class BatchedQueryServer:
                             seeds=int(seeds.size), padded=padded.shape[0],
                             alpha=float(alpha), eps=float(eps)) as lsp:
                 res = sess.local_cluster(padded, alpha=alpha, eps=eps)
+                lsp.set(sparse=res.frontier is not None,
+                        spilled=bool(res.spilled))
                 lsp.fence(res.best_conductance)
             sizes = np.asarray(res.best_size)
             phis = np.asarray(res.best_conductance)

@@ -383,7 +383,10 @@ class StreamSession:
         Serves over ``DynamicGraph.view()`` (device-resident) through the
         engine session, so answers reflect every applied delta; under the
         strict error-budget policy they are bit-identical to a fresh static
-        session on the equivalent graph. See
+        session on the equivalent graph — including on the sparse-frontier
+        push path (``frontier_mode=``/``frontier_cap=`` plan overrides
+        forward through ``**kw``), whose capped ``[S, cap]`` buffers keep
+        high-QPS seed expansion affordable between deltas. See
         :meth:`repro.engine.engine.MiningSession.local_cluster`.
         """
         return self.session.local_cluster(seeds, alpha, eps, **kw)

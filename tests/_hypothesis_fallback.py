@@ -61,14 +61,15 @@ def settings(max_examples: int = 10, deadline=None, **_ignored):
     return deco
 
 
-def given(*strats: _Strategy):
+def given(*strats: _Strategy, **kwstrats: _Strategy):
     def deco(fn):
         # NOTE: no functools.wraps — pytest must see a zero-arg signature,
         # not the strategy parameters (it would resolve them as fixtures)
         def wrapper():
             rng = np.random.default_rng(0)
             for _ in range(getattr(wrapper, "_max_examples", 10)):
-                fn(*(s.draw(rng) for s in strats))
+                fn(*(s.draw(rng) for s in strats),
+                   **{k: s.draw(rng) for k, s in kwstrats.items()})
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__

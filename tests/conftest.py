@@ -29,6 +29,20 @@ except ImportError:
     pass
 
 
+def pytest_addoption(parser):
+    """Register the `cov_ratchet` ini key (nightly coverage floor).
+
+    The value itself is consumed by CI's nightly job, which greps it out of
+    pytest.ini and passes it as --cov-fail-under; registering it here keeps
+    local pytest runs from warning about an unknown ini option.
+    """
+    parser.addini(
+        "cov_ratchet",
+        "nightly coverage ratchet percentage (source of --cov-fail-under)",
+        default="0",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -4,11 +4,23 @@ Covers the satellite checklist: (1) PPR forward push against a dense
 power-iteration reference within the ACL truncation bound, (2) exact sweep
 increments against brute force, (3) sketch-gated sweep conductance within
 the ``core.bounds``-derived interval of the exact sweep on Kronecker graphs,
-(4) determinism under seed-batch permutation, and (5) streamed answers over
-``DynamicGraph.view()`` bit-identical to a fresh static session.
+(4) determinism under seed-batch permutation — hardened into real hypothesis
+properties (permutation invariance, duplicate-seed dedup, ``alpha→1``
+degeneracy) that scale up under ``HYPOTHESIS_PROFILE=nightly``, (5) streamed
+answers over ``DynamicGraph.view()`` bit-identical to a fresh static
+session, and (6) the pow2 seed-batch bucketing that keeps ragged batches on
+one compiled push program.
 """
+import functools
+import os
+
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import bounds, graph as G, sketches as SK
 from repro.core.algorithms import localcluster as LC
@@ -16,11 +28,22 @@ from repro import engine as ENG
 from repro.stream import BatchedQueryServer, DynamicGraph, StreamSession
 
 ALPHA = 0.15
+# explicit @settings pins override any loaded hypothesis profile, so the
+# nightly raise must come from the env var directly (same contract as
+# tests/test_stream.py)
+N_EXAMPLES = 25 if os.environ.get("HYPOTHESIS_PROFILE") == "nightly" else 5
+
+
+@functools.lru_cache(maxsize=None)
+def _kron():
+    # plain cached builder for @given-wrapped properties, which can't take
+    # fixtures under the fallback shim (zero-arg wrapper)
+    return G.kronecker(8, 8, seed=1)
 
 
 @pytest.fixture(scope="module")
 def kron():
-    return G.kronecker(8, 8, seed=1)
+    return _kron()
 
 
 @pytest.fixture(scope="module")
@@ -143,6 +166,77 @@ def test_seed_batch_order_determinism(kron):
                                   np.asarray(res_p.conductance))
     np.testing.assert_array_equal(np.asarray(res_a.best_size)[perm],
                                   np.asarray(res_p.best_size))
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(pseed=st.integers(0, 1_000_000),
+       seeds_list=st.lists(st.integers(0, 255), min_size=2, max_size=6,
+                           unique=True))
+def test_property_seed_batch_permutation_invariance(pseed, seeds_list):
+    # per-seed answers are row-independent: any permutation of the batch
+    # permutes the outputs bit-for-bit (no cross-row leakage through the
+    # batched push/sweep or the pow2 padding)
+    kron = _kron()
+    seeds = np.asarray(seeds_list, np.int32)
+    perm = np.random.default_rng(pseed).permutation(seeds.size)
+    res_a = LC.local_cluster(kron, seeds, ALPHA, 1e-3)
+    res_p = LC.local_cluster(kron, seeds[perm], ALPHA, 1e-3)
+    np.testing.assert_array_equal(np.asarray(res_a.order)[perm],
+                                  np.asarray(res_p.order))
+    np.testing.assert_array_equal(np.asarray(res_a.conductance)[perm],
+                                  np.asarray(res_p.conductance))
+    np.testing.assert_array_equal(np.asarray(res_a.best_size)[perm],
+                                  np.asarray(res_p.best_size))
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255))
+def test_property_duplicate_seeds_dedup(a, b):
+    # duplicates are first-class (the server pads batches by repeating a
+    # seed): copies produce bit-identical rows to each other and to the
+    # dedup'd batch
+    kron = _kron()
+    res_dup = LC.local_cluster(kron, np.array([a, b, a], np.int32),
+                               ALPHA, 1e-3)
+    res_uni = LC.local_cluster(kron, np.array([a, b], np.int32), ALPHA, 1e-3)
+    for field in ("order", "conductance", "best_size", "support"):
+        dup = np.asarray(getattr(res_dup, field))
+        uni = np.asarray(getattr(res_uni, field))
+        np.testing.assert_array_equal(dup[0], dup[2], field)
+        np.testing.assert_array_equal(dup[:2], uni, field)
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 255))
+def test_property_alpha_to_one_collapses_to_seed(seed):
+    # alpha → 1: the walk teleports home almost surely, so PPR mass
+    # concentrates on the seed itself and the push converges immediately
+    kron = _kron()
+    alpha = 0.999
+    p, r, iters = LC.ppr_push(kron, np.array([seed], np.int32), alpha, 1e-3)
+    p, r = np.asarray(p)[0], np.asarray(r)[0]
+    assert int(np.argmax(p)) == seed
+    assert p[seed] >= alpha - 1e-6                 # teleport share stays home
+    off = p.sum() - p[seed] + r.sum()
+    assert off <= (1.0 - alpha) + 1e-6
+    assert int(iters) <= 2
+
+
+def test_ragged_seed_batches_share_one_compile(kron):
+    # the pow2 seed bucketing bounds XLA compiles: every ragged batch size
+    # in (4, 8] lands on the same compiled program for both push layouts
+    LC.ppr_push(kron, np.arange(8, dtype=np.int32), ALPHA, 1e-3)
+    LC.ppr_push_sparse(kron, np.arange(8, dtype=np.int32), ALPHA, 1e-3)
+    dense_before = LC._ppr_push_impl._cache_size()
+    sparse_before = LC._ppr_push_sparse_impl._cache_size()
+    for s in (5, 6, 7, 8):
+        p, _, _ = LC.ppr_push(kron, np.arange(s, dtype=np.int32), ALPHA, 1e-3)
+        assert p.shape == (s, kron.n)              # pad rows sliced back off
+        fr = LC.ppr_push_sparse(kron, np.arange(s, dtype=np.int32), ALPHA,
+                                1e-3)
+        assert fr.idx.shape[0] == s
+    assert LC._ppr_push_impl._cache_size() == dense_before
+    assert LC._ppr_push_sparse_impl._cache_size() == sparse_before
 
 
 def test_plan_sweep_cap_bounds_prefix(kron):

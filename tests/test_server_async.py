@@ -534,3 +534,83 @@ def test_save_mid_stream_is_version_consistent():
         assert restored.serving_view().version == restored.version
         # the restored edge set must be a consistent prefix of the stream
         assert restored.dyn.m <= st.dyn.m
+
+
+def test_async_localcluster_races_deltas_bit_identical():
+    """submit_local_cluster under async_flush=True with deltas landing from
+    another thread: every served answer — on the sparse-frontier push path —
+    must equal a synchronous cache-off replay at its ``answered_version``."""
+    n = 60
+    g = G.erdos_renyi(n, 0.1, seed=9)
+    rng = np.random.default_rng(17)
+    chunks = [c[c[:, 0] != c[:, 1]] for c in
+              (rng.integers(0, n, size=(5, 2)).astype(np.int64)
+               for _ in range(5))]
+    # cap ≥ n: the sparse path engages but provably cannot spill, so every
+    # answer stays on the capped-buffer code under the races
+    kw = dict(KW, frontier_mode="sparse", frontier_cap=64)
+
+    # warm XLA on a throwaway twin (same rationale as the stress test above)
+    warm_st = stream_session(g, "bf", **kw)
+    warm = BatchedQueryServer(warm_st, min_batch=8, cache=False)
+    warm.submit_local_cluster(3, eps=1e-2)
+    warm.flush()
+    warm_st.apply_delta(chunks[0])
+    warm.submit_local_cluster(4, eps=1e-2)
+    warm.flush()
+    warm.close()
+
+    st = stream_session(g, "bf", **kw)
+    srv = BatchedQueryServer(st, min_batch=8, async_flush=True,
+                             max_batch=2, max_wait_s=0.005)
+    stop = threading.Event()
+
+    def mutate():
+        for chunk in chunks:
+            if stop.is_set():
+                return
+            st.apply_delta(chunk)
+            time.sleep(0.004)
+
+    mutator = threading.Thread(target=mutate)
+    seeds = {}
+    results = {}
+    qrng = np.random.default_rng(23)
+    try:
+        mutator.start()
+        i = 0
+        while mutator.is_alive() and i < 100:
+            seed = int(qrng.integers(0, n))
+            seeds[srv.submit_local_cluster(seed, eps=1e-2)] = seed
+            i += 1
+            results.update(srv.drain())
+            time.sleep(0.001)
+        mutator.join()
+        for seed in (3, 17, 42):      # guaranteed post-delta answers
+            seeds[srv.submit_local_cluster(seed, eps=1e-2)] = seed
+        results.update(srv.flush())
+        results.update(_wait_results(srv, len(seeds) - len(results)))
+    finally:
+        stop.set()
+        if mutator.is_alive():
+            mutator.join()
+        srv.close()
+
+    assert len(results) == len(seeds)
+    versions = sorted({r.answered_version for r in results.values()})
+    assert versions[-1] == len(chunks)         # deltas really interleaved
+
+    for v in versions:
+        truth_st = stream_session(g, "bf", **kw)
+        for chunk in chunks[:v]:
+            truth_st.apply_delta(chunk)
+        truth = BatchedQueryServer(truth_st, min_batch=8, cache=False)
+        rids = [rid for rid, r in results.items()
+                if r.answered_version == v]
+        mapping = {truth.submit_local_cluster(seeds[rid], eps=1e-2): rid
+                   for rid in rids}
+        answers = truth.flush()
+        for t_rid, rid in mapping.items():
+            assert _values_equal(results[rid].value, answers[t_rid].value), \
+                f"localcluster(seed={seeds[rid]}) diverged at version {v}"
+        truth.close()

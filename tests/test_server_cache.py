@@ -344,3 +344,76 @@ def test_poll_flushes_after_max_wait():
     srv2 = BatchedQueryServer(st, min_batch=8, max_wait_s=30.0, max_batch=99)
     srv2.submit_triangle_count()
     assert srv2.poll() == {} and srv2.pending_count() == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: localcluster answers and footprints survive save/restore
+# ---------------------------------------------------------------------------
+
+def test_localcluster_footprint_survives_checkpoint_restore(tmp_path):
+    from repro.stream import StreamSession
+    g = G.kronecker(7, 6, seed=2)
+    st = stream_session(g, "bf", storage_budget=0.5)
+    srv = BatchedQueryServer(st, min_batch=8)
+    rid = srv.submit_local_cluster(5, alpha=0.15, eps=1e-2)
+    out = srv.flush()
+    res = st.local_cluster(np.array([5], np.int32), alpha=0.15, eps=1e-2)
+    fp = res.footprint(0)
+    st.save(str(tmp_path))
+
+    st2 = StreamSession.restore(str(tmp_path))
+    # the restored session recomputes the same answer AND the same
+    # dependency set — the serving cache's invalidation unit round-trips
+    res2 = st2.local_cluster(np.array([5], np.int32), alpha=0.15, eps=1e-2)
+    np.testing.assert_array_equal(res2.footprint(0), fp)
+    srv2 = BatchedQueryServer(st2, min_batch=8)
+    rid2 = srv2.submit_local_cluster(5, alpha=0.15, eps=1e-2)
+    out2 = srv2.flush()
+    _assert_value_equal(out2[rid2].value, out[rid].value)
+
+    # and the restored footprint still steers eviction correctly
+    key = ("localcluster", 5, 0.15, 1e-2)
+    if key in srv2.cache:
+        inside = int(fp[0])
+        outside = [v for v in range(st2.dyn.n)
+                   if v not in set(fp.tolist())][:2]
+        if len(outside) == 2:
+            st2.apply_delta([outside])               # misses the footprint
+            assert key in srv2.cache
+        st2.apply_delta([[inside, outside[0] if outside else inside + 1]])
+        assert key not in srv2.cache                 # footprint hit evicts
+
+
+# ---------------------------------------------------------------------------
+# stale-put guard: a localcluster put that crossed a delta is rejected
+# ---------------------------------------------------------------------------
+
+def test_stale_put_guard_rejects_localcluster_entry_crossing_delta():
+    from repro.stream import ResultCache
+    g = G.kronecker(7, 6, seed=2)
+    st = stream_session(g, "bf", storage_budget=0.5)
+    res = st.local_cluster(np.array([5], np.int32), alpha=0.15, eps=1e-2)
+    fp = res.footprint(0)
+    key = ("localcluster", 5, 0.15, 1e-2)
+    c = ResultCache()
+    # a delta lands (epoch 1) on a support vertex while the answer computed
+    # from the epoch-0 view was still in flight: the late put must lose
+    assert c.invalidate([int(fp[-1])], epoch=1) == 0
+    c.put(key, {"size": 1}, Footprint.of(fp), version=0, epoch=0)
+    assert key not in c and c.rejected_stale == 1
+    # same race, but the delta missed the support: the put is admitted
+    # (fresh cache — the intersecting epoch-1 entry above must stay fatal
+    # in its own log for as long as it is retained)
+    c.put(key, {"size": 1}, Footprint.of(fp), version=0, epoch=0)
+    assert c.rejected_stale == 2
+    outside = next(v for v in range(g.n) if v not in set(fp.tolist()))
+    cm = ResultCache()
+    cm.invalidate([outside], epoch=2)
+    cm.put(key, {"size": 1}, Footprint.of(fp), version=0, epoch=0)
+    assert key in cm and cm.rejected_stale == 0
+    # an answer computed AFTER the delta's publish epoch is admitted even
+    # when its support intersects the delta
+    c2 = ResultCache()
+    c2.invalidate([int(fp[-1])], epoch=1)
+    c2.put(key, {"size": 1}, Footprint.of(fp), version=1, epoch=1)
+    assert key in c2 and c2.rejected_stale == 0
