@@ -46,6 +46,11 @@ class Counter:
     thread both hit serving counters).
     """
 
+    # pgcheck PG001: the count moves only under the per-instrument lock;
+    # reads are free (a torn read of an int is impossible in CPython, and
+    # the `value` property is an intentionally unlocked snapshot)
+    _GUARDED_BY = {"_value": "write:_lock"}
+
     __slots__ = ("_value", "_lock")
 
     def __init__(self):
@@ -71,6 +76,8 @@ class Counter:
 
 class Gauge:
     """Last-write-wins scalar (``add`` is locked: it is a read-modify-write)."""
+
+    _GUARDED_BY = {"_value": "write:_lock"}  # pgcheck PG001; see Counter
 
     __slots__ = ("_value", "_lock")
 
@@ -104,6 +111,10 @@ class Histogram:
     ``mean``/``np.percentile`` from :meth:`values` and stays bit-compatible
     with the pre-registry implementation.
     """
+
+    # pgcheck PG001: deque mutation and iteration must not race (appending
+    # past maxlen while iterating raises); `count` reads are free snapshots
+    _GUARDED_BY = {"_window": "_lock", "count": "write:_lock"}
 
     __slots__ = ("_window", "count", "_lock")
 
@@ -145,6 +156,10 @@ class Histogram:
 
 class MetricsRegistry:
     """Thread-safe, label-aware home for counters/gauges/histograms."""
+
+    # pgcheck PG001: fetch-or-create and enumeration both hold the lock —
+    # an unlocked fast path could observe a registration mid-flight
+    _GUARDED_BY = {"_metrics": "_lock"}
 
     def __init__(self):
         self._lock = threading.Lock()

@@ -108,6 +108,18 @@ class ResultCache:
     epoch.
     """
 
+    # machine-checked lock discipline (tools/pgcheck PG001): every piece of
+    # cache state — entry map, inverted index, whole-graph set, stale-put
+    # log — moves only under the one re-entrant lock. Internals that rely
+    # on the caller's lock carry the `_locked` suffix instead.
+    _GUARDED_BY = {
+        "_entries": "_lock",
+        "_by_vertex": "_lock",
+        "_whole": "_lock",
+        "_inval_log": "_lock",
+        "_inval_floor": "_lock",
+    }
+
     def __init__(self, capacity: int = 4096):
         self.capacity = int(capacity)
         self._lock = threading.RLock()
@@ -154,7 +166,7 @@ class ResultCache:
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None and not entry.vol_safe(vol_total_now):
-                self._remove(key)
+                self._remove_locked(key)
                 self.evicted_guard += 1
                 entry = None
             if entry is None:
@@ -171,7 +183,7 @@ class ResultCache:
         of the volume guard live here so they cannot drift apart."""
         return max2vol + _VOL_GUARD_SLACK <= vol_total
 
-    def _put_is_stale(self, footprint: Footprint,
+    def _put_is_stale_locked(self, footprint: Footprint,
                       epoch: Optional[int]) -> bool:
         """Did any invalidation newer than the put's epoch kill this entry
         before it could be inserted? (Caller holds the lock.)"""
@@ -202,17 +214,17 @@ class ResultCache:
         callers).
         """
         with self._lock:
-            if self._put_is_stale(footprint, epoch):
+            if self._put_is_stale_locked(footprint, epoch):
                 self.rejected_stale += 1
                 return
             if key in self._entries:
-                self._remove(key)
+                self._remove_locked(key)
             while len(self._entries) >= self.capacity:
-                # unindex BEFORE dropping the entry: _unindex reads the
+                # unindex BEFORE dropping the entry: _unindex_locked reads
                 # entry's footprint, so popitem-first would leak the dead
                 # key in every _by_vertex bucket (over-eviction + inflated
                 # counters)
-                self._remove(next(iter(self._entries)))
+                self._remove_locked(next(iter(self._entries)))
                 self.evicted_capacity += 1
             entry = CacheEntry(key, value, footprint, version,
                                max2vol=max2vol, vol_total=vol_total)
@@ -252,9 +264,9 @@ class ResultCache:
             n_fp = len(doomed)
             whole = set(self._whole)
             for key in doomed:
-                self._remove(key)
+                self._remove_locked(key)
             for key in whole:
-                self._remove(key)
+                self._remove_locked(key)
             self.evicted_footprint += n_fp
             self.evicted_whole += len(whole)
             sp.set(evicted_footprint=n_fp, evicted_whole=len(whole))
@@ -271,7 +283,7 @@ class ResultCache:
     # internals / stats
     # ------------------------------------------------------------------
 
-    def _unindex(self, key: Tuple) -> None:
+    def _unindex_locked(self, key: Tuple) -> None:
         entry = self._entries.get(key)
         self._whole.discard(key)
         if entry is None or entry.footprint.vertices is None:
@@ -283,8 +295,8 @@ class ResultCache:
                 if not bucket:
                     del self._by_vertex[int(v)]
 
-    def _remove(self, key: Tuple) -> None:
-        self._unindex(key)
+    def _remove_locked(self, key: Tuple) -> None:
+        self._unindex_locked(key)
         self._entries.pop(key, None)
 
     def stats(self) -> dict:

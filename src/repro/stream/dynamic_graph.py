@@ -384,13 +384,22 @@ class HostGraphSnapshot:
     snapshot's overlay (:meth:`DynamicGraph._shield_snapshots`), a cost
     sized by the delta and the number of live snapshots, never by n. On
     capacity growth the adjacency is rebound instead, which freezes the old
-    array for free — the identity check in :meth:`_save_rows` notices.
+    array for free — the identity check in :meth:`_save_rows_locked`
+    notices.
 
     Snapshots are read concurrently with delta application (that is the
     whole point), so shield+overwrite on the delta thread and the
     overlay-miss → live-row read in :meth:`neighbors` synchronize on the
     graph's shared ``_row_lock``; see :meth:`neighbors` for the protocol.
     """
+
+    # machine-checked lock discipline (tools/pgcheck PG001): the overlay is
+    # shared between the delta thread (shield) and snapshot readers (miss
+    # path) — both sides hold the graph's row lock. The one intentional
+    # unlocked probe in `neighbors` carries its own suppression.
+    _GUARDED_BY = {
+        "_overlay": "_lock",
+    }
 
     __slots__ = ("n", "m", "version", "deg", "edge_keys", "_adj", "_overlay",
                  "_lock", "__weakref__")
@@ -405,10 +414,12 @@ class HostGraphSnapshot:
         self._overlay = {}
         self._lock = dyn._row_lock
 
-    def _save_rows(self, adj: np.ndarray, touched: np.ndarray) -> None:
+    def _save_rows_locked(self, adj: np.ndarray,
+                          touched: np.ndarray) -> None:
         # first save wins: the overlay must hold the row as of snapshot
         # creation, and a vertex touched twice was already saved pre-first-
         # mutation (rows untouched since creation are read live — identical)
+        # caller (_shield_snapshots) holds the shared row lock
         if self._adj is not adj:
             return                        # adjacency was rebound: frozen
         overlay = self._overlay
@@ -431,7 +442,9 @@ class HostGraphSnapshot:
         sound: a hit is immutable, and a miss is re-checked under the lock.
         """
         iv = int(v)
-        row = self._overlay.get(iv)
+        # double-checked locking: a hit is an immutable private row, and a
+        # miss is re-probed under the lock just below
+        row = self._overlay.get(iv)  # pgcheck: disable=PG001
         if row is None:
             with self._lock:
                 row = self._overlay.get(iv)
@@ -442,6 +455,15 @@ class HostGraphSnapshot:
 
 class DynamicGraph:
     """Mutable undirected graph on a fixed vertex set with batched deltas."""
+
+    # machine-checked lock discipline (tools/pgcheck PG001): the delta
+    # thread's shield-then-overwrite of `adj`/`deg` must be one critical
+    # section with snapshot row reads (`write:` — host reads are the common
+    # case and synchronize through snapshot capture, not the lock).
+    _GUARDED_BY = {
+        "adj": "write:_row_lock",
+        "deg": "write:_row_lock",
+    }
 
     def __init__(self, n: int, edge_keys: np.ndarray, deg: np.ndarray,
                  adj: np.ndarray, headroom: float = 1.5, version: int = 0):
@@ -542,7 +564,7 @@ class DynamicGraph:
         snapshot's overlay (called by ``_apply_delta`` pre-mutation)."""
         if self._snapshots:
             for snap in tuple(self._snapshots):
-                snap._save_rows(self.adj, touched)
+                snap._save_rows_locked(self.adj, touched)
 
     @property
     def device(self) -> DeviceGraphState:
@@ -648,12 +670,15 @@ class DynamicGraph:
         if del_uv.size:
             new_deg -= np.bincount(del_uv.ravel(), minlength=n)
         need = int(new_deg.max())
+        grown = None
         if need > self.capacity:
-            # grow with headroom so a run of inserts amortizes reallocation
+            # grow with headroom so a run of inserts amortizes reallocation;
+            # built here, but rebound onto self.adj only inside the row
+            # lock below — the rebind is a write to published state
             cap = max(need, int(math.ceil(need * self.headroom)))
             grown = np.full((n, cap), n, dtype=np.int32)
             grown[:, :self.capacity] = self.adj
-            self.adj = grown
+        new_cap = grown.shape[1] if grown is not None else self.capacity
 
         # vectorized touched-row rewrite (np.unique/offset-scatter, the
         # DeltaResult.insert_rows technique — no per-vertex Python loop):
@@ -676,18 +701,23 @@ class DynamicGraph:
             dst = np.concatenate([dst, ins_uv[:, 1], ins_uv[:, 0]])
         order = np.lexsort((dst, src))
         src, dst = src[order], dst[order]
-        rows_new = np.full((touched.size, self.capacity), n, dtype=np.int32)
+        rows_new = np.full((touched.size, new_cap), n, dtype=np.int32)
         if src.size:
             verts, start = np.unique(src, return_index=True)
             counts = np.diff(np.append(start, src.size))
             row = np.repeat(np.searchsorted(touched, verts), counts)
             col = np.arange(src.size) - np.repeat(start, counts)
             rows_new[row, col] = dst
-        # shield + overwrite are one critical section: a snapshot reader
-        # that misses the overlay and falls through to the live row must
-        # never observe the row post-overwrite (HostGraphSnapshot.neighbors
-        # takes the same lock)
+        # rebind + shield + overwrite are one critical section: a snapshot
+        # reader that misses the overlay and falls through to the live row
+        # must never observe the row post-overwrite
+        # (HostGraphSnapshot.neighbors takes the same lock). The rebind
+        # happens first so shielding sees the new array and skips copies —
+        # the old array is frozen by the rebind, exactly what snapshots
+        # captured (`_save_rows_locked`'s identity check).
         with self._row_lock:
+            if grown is not None:
+                self.adj = grown
             self._shield_snapshots(touched)
             self.adj[touched] = rows_new
             self.deg = new_deg.astype(np.int32)

@@ -166,6 +166,36 @@ class BatchedQueryServer:
                       even with no other admission policy configured.
     """
 
+    # machine-checked lock discipline (tools/pgcheck PG001): these fields
+    # may only be touched under the named lock(s) — `_cond` wraps `_lock`,
+    # so holding either is holding the same mutex. `write:` specs leave
+    # reads free: `cache` is an atomic published reference (flushes alias
+    # it once and run on the alias), matching the serving-view pattern.
+    _GUARDED_BY = {
+        "_queue": "_lock|_cond",
+        "_results": "_lock|_cond",
+        "_next_id": "_lock|_cond",
+        "_pending_tenant": "_lock|_cond",
+        "_closed": "_lock|_cond",
+        "_pad": "_lock|_cond",
+        "_service_ewma": "_lock|_cond",
+        "_listener": "_lock|_cond",
+        "cache": "write:_lock|_cond",
+    }
+
+    # machine-checked footprint coverage (tools/pgcheck PG005, invariant 7):
+    # every query kind this server submits must declare how its cached
+    # answers are invalidated — an exact Footprint built in the flush path,
+    # or a whole-graph marker (any delta invalidates).
+    _KIND_FOOTPRINTS = {
+        "similarity": "exact",
+        "linkpred": "exact",
+        "membership": "exact",
+        "localcluster": "exact",
+        "tc": "whole_graph",
+        "cliques": "whole_graph",
+    }
+
     def __init__(self, stream: StreamSession, min_batch: int = 64,
                  stats_window: int = 65536, cache: bool = True,
                  cache_capacity: int = 4096,
@@ -256,9 +286,15 @@ class BatchedQueryServer:
         return self._c_coalesced.value
 
     def _pad_add(self, name: str, real: int, padded: int) -> None:
-        """Meter one padded batch: real vs padded row counts for ``name``."""
-        self._pad[name][0] += real
-        self._pad[name][1] += padded
+        """Meter one padded batch: real vs padded row counts for ``name``.
+
+        Called from flush bodies, which run under ``_flush_lock`` but *not*
+        ``_lock`` — the `+=` through the shared dict needs the lock or a
+        concurrent ``stats()`` read can observe a torn (real, padded) pair.
+        """
+        with self._lock:
+            self._pad[name][0] += real
+            self._pad[name][1] += padded
         self.metrics.counter("server_pad_rows", path=name,
                              rows="real").inc(real)
         self.metrics.counter("server_pad_rows", path=name,
@@ -284,15 +320,20 @@ class BatchedQueryServer:
             self._worker = None
         elif first:
             self._flush_queue()        # answer stranded sync-mode requests
-        if self._listener is not None:
-            self.stream.remove_delta_listener(self._listener)
-            self._listener = None
-        self.cache = None
+        # detach under the lock so a racing close() cannot double-remove the
+        # listener; the session call itself runs outside it (the session
+        # takes its own _mutate_lock — never nest the two)
+        with self._lock:
+            listener, self._listener = self._listener, None
+            self.cache = None
+        if listener is not None:
+            self.stream.remove_delta_listener(listener)
 
     @property
     def closed(self) -> bool:
         """True once :meth:`close` has been called."""
-        return self._closed
+        with self._lock:
+            return self._closed
 
     # ------------------------------------------------------------------
     # submission
@@ -548,9 +589,12 @@ class BatchedQueryServer:
             dt = time.perf_counter() - t0
             # smoothed service-time estimate drives the worker's
             # deadline-pressure check (how early must a flush start so its
-            # requests still make their SLOs)
-            self._service_ewma = (dt if self._service_ewma == 0.0
-                                  else 0.8 * self._service_ewma + 0.2 * dt)
+            # requests still make their SLOs); _due_locked reads it under
+            # _lock, so the read-modify-write must hold it too
+            with self._lock:
+                self._service_ewma = (
+                    dt if self._service_ewma == 0.0
+                    else 0.8 * self._service_ewma + 0.2 * dt)
         with self._cond:
             self._cond.notify_all()          # wake poll()/flush() waiters
 
@@ -563,6 +607,11 @@ class BatchedQueryServer:
         cannot tear this flush.
         """
         self._c_flushes.inc()
+        # one read of the published cache reference for the whole body: a
+        # concurrent close() nulls self.cache, and re-reading it mid-flush
+        # would turn that into an AttributeError between the None check and
+        # the use (the alias keeps the cache alive until this flush ends)
+        cache = self.cache
         sess = snap.session
         host = snap.host
         version = snap.version
@@ -579,10 +628,10 @@ class BatchedQueryServer:
         answers: Dict[Tuple, object] = {}
         misses: List[Tuple] = []
         with trace.span("cache.lookup", keys=len(by_key),
-                        enabled=self.cache is not None) as csp:
+                        enabled=cache is not None) as csp:
             for key in by_key:
-                if self.cache is not None:
-                    hit = self.cache.get(
+                if cache is not None:
+                    hit = cache.get(
                         key, vol_now if key[0] == "localcluster" else None)
                     if hit is not None:
                         answers[key] = hit.value
@@ -640,6 +689,10 @@ class BatchedQueryServer:
                                 pairs_j[:, 0]).astype(jnp.float32)
                 dv_j = jnp.take(sess.graph.deg,
                                 pairs_j[:, 1]).astype(jnp.float32)
+                # fence the gathers on the batch span before copying to
+                # host: the asarray below would otherwise block inside the
+                # span with the wait charged to whatever syncs first
+                psp.fence((du_j, dv_j))
                 cards = np.asarray(cards_j)
                 du_all, dv_all = np.asarray(du_j), np.asarray(dv_j)
                 if sess.sketch is not None:
@@ -699,18 +752,18 @@ class BatchedQueryServer:
                 # frozen even with the cache off: coalesced duplicates
                 # share this object across request ids
                 answers[key] = _freeze(value)
-                if self.cache is not None:
+                if cache is not None:
                     # conductance reads the total volume through
                     # min(vol, 2m − vol): cache only clusters provably on
                     # the small side, guarded against later volume drift
                     swept = order[i, :sup[i]]
                     swept = swept[swept < host.n]
                     max2vol = 2.0 * float(deg_host[swept].sum())
-                    if self.cache.cacheable(max2vol, vol_now):
+                    if cache.cacheable(max2vol, vol_now):
                         fp = Footprint.of(res.footprint(i), key[1])
-                        self.cache.put(key, value, fp, version,
-                                       max2vol=max2vol, vol_total=vol_now,
-                                       epoch=snap.epoch)
+                        cache.put(key, value, fp, version,
+                                  max2vol=max2vol, vol_total=vol_now,
+                                  epoch=snap.epoch)
 
         # remaining miss kinds + cache fills
         for key in misses:
@@ -754,8 +807,8 @@ class BatchedQueryServer:
             # frozen unconditionally: coalesced duplicates (and later cache
             # hits) all share this object — nobody gets to mutate it
             answers[key] = _freeze(value)
-            if self.cache is not None:
-                self.cache.put(key, value, fp, version, epoch=snap.epoch)
+            if cache is not None:
+                cache.put(key, value, fp, version, epoch=snap.epoch)
 
         # fan out: every request id gets its key's (shared) answer
         misses_deadline = 0
@@ -799,10 +852,12 @@ class BatchedQueryServer:
                    for labels, inst in
                    self.metrics.labelled("server_served_total").items()
                    if labels}
+        with self._lock:
+            pad_names = list(self._pad)
         pad = {name: (
             self.metrics.value("server_pad_rows", path=name, rows="real"),
             self.metrics.value("server_pad_rows", path=name, rows="padded"))
-            for name in self._pad}
+            for name in pad_names}
         out = {
             "served": self._c_served.value,
             "flushes": self._c_flushes.value,
@@ -840,6 +895,7 @@ class BatchedQueryServer:
         if tenants:
             out["tenants"] = tenants
             out["shed"] = sum(t["shed"] for t in tenants.values())
-        if self.cache is not None:
-            out["cache"] = self.cache.stats()
+        cache = self.cache              # one read; close() may null it
+        if cache is not None:
+            out["cache"] = cache.stats()
         return out

@@ -81,6 +81,20 @@ class ServingView:
 class StreamSession:
     """Interleaved mutation + query serving over one maintained sketch."""
 
+    # machine-checked lock discipline (tools/pgcheck PG001). `write:` specs
+    # are the snapshot-isolation contract: `_serving`, `session` and
+    # `version` are atomic published references — readers never lock, and
+    # only mutators (all of which hold `_mutate_lock`) may swap them. The
+    # lease/donation pair lives entirely under `_view_cond`.
+    _GUARDED_BY = {
+        "_serving": "write:_mutate_lock",
+        "session": "write:_mutate_lock",
+        "version": "write:_mutate_lock",
+        "_delta_listeners": "_mutate_lock",
+        "_read_leases": "_view_cond",
+        "_donating": "_view_cond",
+    }
+
     def __init__(self, dyn: DynamicGraph, kind: Optional[str] = "bf",
                  storage_budget: float = 0.25, num_hashes: int = 2,
                  seed: int = 0, words: Optional[int] = None,
@@ -210,21 +224,25 @@ class StreamSession:
         *before* the new :class:`ServingView` publishes, so by the time any
         flush can read the new version its cache is already clean.
         """
-        self._delta_listeners.append(fn)
+        with self._mutate_lock:
+            self._delta_listeners.append(fn)
 
     def remove_delta_listener(self, fn) -> None:
         """Unsubscribe a listener previously added (no-op if absent)."""
-        if fn in self._delta_listeners:
-            self._delta_listeners.remove(fn)
+        with self._mutate_lock:
+            if fn in self._delta_listeners:
+                self._delta_listeners.remove(fn)
 
-    def _publish_invalid(self, vertices: np.ndarray, epoch: int) -> None:
+    def _publish_invalid_locked(self, vertices: np.ndarray,
+                                epoch: int) -> None:
         """Push one delta's changed-vertex set to every listener (a copy of
-        the list: a listener may unsubscribe itself mid-publish)."""
+        the list: a listener may unsubscribe itself mid-publish). Callers
+        hold ``_mutate_lock``."""
         if vertices.size:
             for fn in list(self._delta_listeners):
                 fn(vertices, epoch)
 
-    def _publish_view(self) -> None:
+    def _publish_view_locked(self) -> None:
         """Atomically publish the post-mutation state as the serving view
         (callers hold ``_mutate_lock`` and have already fired the
         invalidation feed). Publication also ends any donation window the
@@ -305,9 +323,9 @@ class StreamSession:
             self.cards_carried += car
             # invalidation completes BEFORE publication: once a flush
             # can capture the new view, every stale cache entry is gone
-            self._publish_invalid(invalid, self._serving.epoch + 1)
+            self._publish_invalid_locked(invalid, self._serving.epoch + 1)
             self.session = new_session
-        self._publish_view()
+        self._publish_view_locked()
         if self.maintainer is not None:
             accuracy.record_maintenance(self.maintainer.stats(),
                                         self.metrics)
@@ -344,10 +362,12 @@ class StreamSession:
                 # a rebuild replaces stale sketch rows: cached answers
                 # reading those rows are now wrong, exactly like a delta
                 # touching them
-                self._publish_invalid(np.asarray(rebuilt, dtype=np.int64),
-                                      self._serving.epoch + 1)
+                # rebuilt is host data (np.nonzero output) — .astype is a
+                # pure host cast, not a device copy needing a span fence
+                self._publish_invalid_locked(rebuilt.astype(np.int64),
+                                             self._serving.epoch + 1)
                 self.session = new_session
-                self._publish_view()
+                self._publish_view_locked()
             sp.set(rows_rebuilt=int(rebuilt.size))
         return int(rebuilt.size)
 
@@ -499,17 +519,20 @@ class StreamSession:
                    k=cfg.get("k") or None, policy=policy, plan=plan,
                    sketch_data=(jnp.asarray(tree["sketch"])
                                 if cfg["kind"] else None), **plan_kw)
-        self.version = int(tree["version"])
-        self.extra = cfg.get("extra") or {}
-        if self.maintainer is not None:
-            mt = self.maintainer
-            mt.dirty = tree["dirty"].astype(bool)
-            mt.stale = tree["stale"].astype(np.int64)
-            mt.rows_incremental, mt.rows_rebuilt, mt.deltas_applied = (
-                int(x) for x in tree["counters"])
-        # __init__ published a view stamped version 0; re-publish so the
-        # serving view carries the restored version
-        self._publish_view()
+        # the restored session is not shared yet, but version/view swaps
+        # are mutations all the same — hold the lock like every mutator
+        with self._mutate_lock:
+            self.version = int(tree["version"])
+            self.extra = cfg.get("extra") or {}
+            if self.maintainer is not None:
+                mt = self.maintainer
+                mt.dirty = tree["dirty"].astype(bool)
+                mt.stale = tree["stale"].astype(np.int64)
+                mt.rows_incremental, mt.rows_rebuilt, mt.deltas_applied = (
+                    int(x) for x in tree["counters"])
+            # __init__ published a view stamped version 0; re-publish so
+            # the serving view carries the restored version
+            self._publish_view_locked()
         return self
 
 

@@ -1,0 +1,32 @@
+"""PG001 negative fixture: guarded fields touched outside their lock."""
+import threading
+
+
+class BadServer:
+    """Declares _GUARDED_BY, then breaks every rule it states."""
+
+    _GUARDED_BY = {
+        "_queue": "_lock",
+        "_stats": "write:_lock",
+    }
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []           # exempt: construction is single-owner
+        self._stats = {}
+
+    def submit(self, item):
+        """Unlocked append to a fully guarded field -> PG001."""
+        self._queue.append(item)
+
+    def tally(self, name):
+        """Unlocked subscript-increment of a write-guarded field -> PG001."""
+        self._stats[name] = self._stats.get(name, 0) + 1
+
+    def drain_later(self):
+        """A closure escapes the with block: its accesses run unlocked
+        whenever the callback fires -> PG001 inside the nested def."""
+        with self._lock:
+            def cb():
+                self._queue.clear()
+        return cb

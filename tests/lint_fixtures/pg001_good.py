@@ -1,0 +1,42 @@
+"""PG001 near-miss twin: the same shapes, each one legal."""
+import threading
+
+
+class GoodServer:
+    """Same guarded fields as the bad twin, disciplined accesses only."""
+
+    _GUARDED_BY = {
+        "_queue": "_lock|_cond",
+        "_stats": "write:_lock",
+    }
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._queue = []
+        self._stats = {}
+
+    def submit(self, item):
+        """Locked append — either lock of the `_lock|_cond` pair counts."""
+        with self._cond:
+            self._queue.append(item)
+
+    def tally(self, name):
+        """Write under the lock; the read in `len` below is free because
+        `_stats` is write-guarded."""
+        with self._lock:
+            self._stats[name] = self._stats.get(name, 0) + 1
+
+    def stat_count(self):
+        """Unlocked *read* of a write-guarded field: legal by design."""
+        return len(self._stats)
+
+    def _drain_locked(self):
+        """`_locked` suffix: callers own self._lock, accesses are free."""
+        out, self._queue = self._queue, []
+        return out
+
+    def drain(self):
+        """Lock, then delegate to the `_locked` internal."""
+        with self._lock:
+            return self._drain_locked()

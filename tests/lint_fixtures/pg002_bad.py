@@ -1,0 +1,30 @@
+"""PG002 negative fixture: publication ordering violations."""
+
+
+class BadSession:
+    """Serving-view mutators that break fork-invalidate-publish."""
+
+    def __init__(self, view):
+        self._serving = view
+        self._listeners = []
+
+    def _publish_invalid(self, vertices):
+        for fn in list(self._listeners):
+            fn(vertices)
+
+    def _publish_view(self, view):
+        self._serving = view
+
+    def apply_delta_wrong_order(self, delta):
+        """Publishes the new view BEFORE the invalidation feed -> PG002:
+        a flush can capture the new view while stale cache entries live."""
+        new_view = delta.build()
+        self._publish_view(new_view)
+        self._publish_invalid(delta.touched)
+
+    def apply_delta_double_publish(self, delta):
+        """Two publications in one mutation -> PG002: readers between the
+        swaps observe a half-mutated generation."""
+        self._publish_invalid(delta.touched)
+        self._serving = delta.build_partial()
+        self._serving = delta.build()

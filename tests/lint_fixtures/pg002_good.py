@@ -1,0 +1,32 @@
+"""PG002 near-miss twin: every legal publication shape."""
+
+
+class GoodSession:
+    """Serving-view mutators that respect fork-invalidate-publish."""
+
+    def __init__(self, view):
+        self._serving = view
+        self._listeners = []
+
+    def _publish_invalid(self, vertices):
+        for fn in list(self._listeners):
+            fn(vertices)
+
+    def _publish_view(self, view):
+        """The single `_serving` store lives in the publish helper — one
+        publication, no invalidation: legal."""
+        self._serving = view
+
+    def apply_delta(self, delta):
+        """Canonical order: invalidate, then publish exactly once. The
+        conditional invalidation (no-op-delta shape) is fine — a no-op
+        publication has nothing to invalidate."""
+        new_view = delta.build()
+        if delta.touched.size:
+            self._publish_invalid(delta.touched)
+        self._publish_view(new_view)
+
+    def restore(self, view):
+        """Publish without any invalidation: legal (fresh state, nothing
+        cached against it yet)."""
+        self._publish_view(view)

@@ -1,0 +1,23 @@
+"""PG003 negative fixture: raw traffic sizes reaching jit/device edges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def _kernel(buf):
+    return buf.sum()
+
+
+def upload_raw_buffer(requests):
+    """Buffer sized directly by len(traffic) -> PG003 at the jnp.asarray
+    boundary: every distinct request count compiles a fresh program."""
+    buf = np.zeros((len(requests), 2), np.int32)
+    return jnp.asarray(buf)
+
+
+def call_jit_with_raw_ctor(xs, arr):
+    """A raw-sized constructor expression passed straight into a jitted
+    callable -> PG003 (size flows through a local and a shape read)."""
+    count = arr.shape[0]
+    return _kernel(np.zeros(count + len(xs), np.float32))

@@ -1,0 +1,32 @@
+"""PG003 near-miss twin: the same flows, bucket-disciplined."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.plan import pow2_bucket
+
+
+@jax.jit
+def _kernel(buf):
+    return buf.sum()
+
+
+def upload_bucketed_buffer(requests):
+    """The size passes through pow2_bucket before the buffer is built:
+    bounded program set, no finding."""
+    buf = np.zeros((pow2_bucket(len(requests), 64), 2), np.int32)
+    buf[:len(requests)] = requests
+    return jnp.asarray(buf)
+
+
+def call_jit_with_bucketed_ctor(xs, arr):
+    """Same shape as the bad twin, cleansed by the bucket helper."""
+    count = pow2_bucket(arr.shape[0] + len(xs), 64)
+    return _kernel(np.zeros(count, np.float32))
+
+
+def host_only_raw_size(requests):
+    """Raw len() sizing is fine when the buffer never crosses a device
+    boundary — host-side accounting has no recompile cost."""
+    buf = np.zeros(len(requests), np.int64)
+    return buf.sum()

@@ -1,0 +1,29 @@
+"""PG004 negative fixture: silent host syncs inside spans / jitted code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import trace
+
+
+def sum_under_span(xs):
+    """.item() inside a trace.span body -> PG004: the span charges the
+    device wait to whichever span happens to synchronize first."""
+    with trace.span("fixture.sum") as sp:
+        total = jnp.asarray(xs).sum()
+        value = total.item()
+        sp.set(rows=len(xs))
+    return value
+
+def copy_unfenced(xs):
+    """np.asarray on an unfenced device value inside a span -> PG004."""
+    with trace.span("fixture.copy"):
+        cards = jnp.asarray(xs) * 2
+        host = np.asarray(cards)
+    return host
+
+
+@jax.jit
+def jitted_item(buf):
+    """Materializing a tracer inside a jitted function -> PG004."""
+    return buf.sum().item()

@@ -1,0 +1,33 @@
+"""PG004 near-miss twin: the same copies, fenced or moved out."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import trace
+
+
+def sum_after_span(xs):
+    """The reduction is fenced on the span; the host read happens after
+    the span exits, so the wait is attributed to the span that launched
+    the work."""
+    with trace.span("fixture.sum") as sp:
+        total = jnp.asarray(xs).sum()
+        sp.fence(total)
+        sp.set(rows=len(xs))
+    return total.item()
+
+def copy_fenced(xs):
+    """np.asarray inside the span is fine once the value is fenced —
+    span exit blocks before the clock read, so timing stays honest."""
+    with trace.span("fixture.copy") as sp:
+        cards = jnp.asarray(xs) * 2
+        sp.fence(cards)
+        host = np.asarray(cards)
+    return host
+
+
+def host_cast_in_span(rows):
+    """np.asarray on plain host data (a list) is not a device sync; the
+    literal argument shape keeps it out of PG004's net by design."""
+    with trace.span("fixture.host"):
+        arr = np.asarray([int(r) for r in rows])
+    return arr

@@ -1,0 +1,55 @@
+"""PG005 negative fixture: query kinds without a footprint contract."""
+
+
+class Footprint:
+    """Stand-in for repro.engine.Footprint."""
+
+    @staticmethod
+    def of(*vertex_sets):
+        return vertex_sets
+
+    @staticmethod
+    def whole_graph():
+        return None
+
+
+class BadQueryServer:
+    """Submits kinds but declares no _KIND_FOOTPRINTS map at all, so every
+    new kind silently enters the cache without an invalidation contract."""
+
+    def __init__(self):
+        self._queue = []
+
+    def _submit(self, kind, key):
+        self._queue.append((kind, key))
+        return len(self._queue)
+
+    def submit_similarity(self, pairs):
+        return self._submit("similarity", ("similarity", len(pairs)))
+
+    def submit_triangle_count(self):
+        return self._submit("tc", ("tc",))
+
+
+class IncompleteQueryServer:
+    """Declares a map, but one submitted kind is missing from it, one
+    declared kind is never submitted, and the declared whole-graph kind
+    has no Footprint.whole_graph() branch backing it."""
+
+    _KIND_FOOTPRINTS = {
+        "tc": "whole_graph",
+        "linkpred": "exact",
+    }
+
+    def __init__(self):
+        self._queue = []
+
+    def _submit(self, kind, key):
+        self._queue.append((kind, key))
+        return len(self._queue)
+
+    def submit_similarity(self, pairs):
+        return self._submit("similarity", ("similarity", len(pairs)))
+
+    def submit_triangle_count(self):
+        return self._submit("tc", ("tc",))

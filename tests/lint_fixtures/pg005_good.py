@@ -1,0 +1,50 @@
+"""PG005 near-miss twin: full footprint coverage for every kind."""
+
+
+class Footprint:
+    """Stand-in for repro.engine.Footprint."""
+
+    @staticmethod
+    def of(*vertex_sets):
+        return vertex_sets
+
+    @staticmethod
+    def whole_graph():
+        return None
+
+
+class GoodQueryServer:
+    """Every submitted kind is declared, and the flush path backs each
+    declaration: an exact Footprint for similarity, a whole-graph marker
+    in the tc branch."""
+
+    _KIND_FOOTPRINTS = {
+        "similarity": "exact",
+        "tc": "whole_graph",
+    }
+
+    def __init__(self):
+        self._queue = []
+        self._cache = {}
+
+    def _submit(self, kind, key):
+        self._queue.append((kind, key))
+        return len(self._queue)
+
+    def submit_similarity(self, pairs):
+        return self._submit("similarity", ("similarity", len(pairs)))
+
+    def submit_triangle_count(self):
+        return self._submit("tc", ("tc",))
+
+    def flush_one(self, kind, key, payload):
+        if kind == "similarity":
+            value = payload.compute_pairs()
+            fp = Footprint.of(payload.pairs)
+        elif kind == "tc":
+            value = payload.triangle_count()
+            fp = Footprint.whole_graph()
+        else:
+            raise ValueError(kind)
+        self._cache[key] = (value, fp)
+        return value

@@ -1,0 +1,203 @@
+"""Tests for tools/pgcheck: the AST invariant checker itself.
+
+Three layers:
+
+* **fixtures** — each ``tests/lint_fixtures/pg00N_bad.py`` trips exactly
+  its pass (and nothing else); each ``pg00N_good.py`` near-miss twin is
+  completely clean, so the passes discriminate, not pattern-match;
+* **mechanics** — suppression comments, the baseline ratchet, config-error
+  findings, and the CLI's exit codes;
+* **the repo itself** — ``src/repro/stream`` + ``src/repro/engine`` carry
+  zero findings (the tier-1 regression CI enforces via the lint job), and
+  deleting one ``with self._lock:`` from the server re-introduces one.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.pgcheck.driver import check_source, pass_ids, run_paths  # noqa: E402
+from tools.pgcheck.model import Baseline, split_findings  # noqa: E402
+
+
+def _check_fixture(name):
+    path = FIXTURES / name
+    return check_source(name, path.read_text(encoding="utf-8"))
+
+
+# ----------------------------------------------------------------------
+# fixtures: every bad file trips exactly its pass; every twin is clean
+# ----------------------------------------------------------------------
+
+BAD_EXPECT = {
+    "pg001_bad.py": ("PG001", 3),   # unlocked append, subscript, closure
+    "pg002_bad.py": ("PG002", 2),   # publish-before-invalidate, double pub
+    "pg003_bad.py": ("PG003", 2),   # raw buffer, raw-sized ctor into jit
+    "pg004_bad.py": ("PG004", 3),   # .item in span, unfenced copy, jit item
+    "pg005_bad.py": ("PG005", 4),   # no map, missing kind, no branch, stale
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_EXPECT))
+def test_bad_fixture_trips_exactly_its_pass(name):
+    expected_pass, expected_count = BAD_EXPECT[name]
+    findings = _check_fixture(name)
+    assert findings, f"{name} produced no findings"
+    assert {f.pass_id for f in findings} == {expected_pass}, \
+        [f.render() for f in findings]
+    assert len(findings) == expected_count, [f.render() for f in findings]
+
+
+@pytest.mark.parametrize("name", [n.replace("_bad", "_good")
+                                  for n in sorted(BAD_EXPECT)])
+def test_good_twin_is_clean(name):
+    findings = _check_fixture(name)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_findings_carry_location_scope_and_hint():
+    findings = _check_fixture("pg001_bad.py")
+    f = next(f for f in findings if "submit" in f.scope)
+    assert f.path == "pg001_bad.py"
+    assert f.line > 1 and f.scope == "BadServer.submit"
+    assert f.hint        # every PG001 finding ships a fix hint
+    rendered = f.render()
+    assert f"pg001_bad.py:{f.line}" in rendered and "PG001" in rendered
+
+
+# ----------------------------------------------------------------------
+# mechanics: suppression, baseline ratchet, config errors, CLI
+# ----------------------------------------------------------------------
+
+_SUPPRESSIBLE = """import threading
+
+class C:
+    _GUARDED_BY = {"_q": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._q = []
+
+    def poke(self):
+        self._q.append(1)@@MARKER@@
+"""
+
+
+def _suppressible(marker=""):
+    return _SUPPRESSIBLE.replace("@@MARKER@@", marker)
+
+
+def test_line_suppression_disables_named_pass():
+    clean = _suppressible("  # pgcheck: disable=PG001")
+    assert check_source("c.py", clean) == []
+    allof = _suppressible("  # pgcheck: disable=all")
+    assert check_source("c.py", allof) == []
+    wrong = _suppressible("  # pgcheck: disable=PG004")
+    assert [f.pass_id for f in check_source("c.py", wrong)] == ["PG001"]
+
+
+def test_baseline_grandfathers_by_scope_not_line(tmp_path):
+    findings = check_source("c.py", _suppressible())
+    assert [f.pass_id for f in findings] == ["PG001"]
+    baseline_file = tmp_path / "baseline.json"
+    Baseline.write(str(baseline_file), findings)
+    baseline = Baseline.load(str(baseline_file))
+    # same violation, shifted lines: still grandfathered (scope-keyed)
+    shifted = "# a comment\n# another\n" + _suppressible()
+    new, old = split_findings(check_source("c.py", shifted), baseline)
+    assert new == [] and len(old) == 1
+    # a different method is a new finding, not grandfathered
+    other = _suppressible() + \
+        "\n    def poke2(self):\n        self._q.append(2)\n"
+    new, old = split_findings(check_source("c.py", other), baseline)
+    assert len(new) == 1 and new[0].scope == "C.poke2"
+
+
+def test_malformed_guard_map_is_a_config_finding():
+    src = ("class C:\n"
+           "    _GUARDED_BY = {'_q': some_variable}\n"
+           "    def poke(self):\n"
+           "        pass\n")
+    findings = check_source("c.py", src)
+    assert len(findings) == 1 and findings[0].pass_id == "PG001"
+    assert "literal" in findings[0].message
+
+
+def test_syntax_error_reports_pg000_not_crash():
+    findings = check_source("c.py", "def broken(:\n")
+    assert [f.pass_id for f in findings] == ["PG000"]
+
+
+def test_pass_catalog_is_complete():
+    assert pass_ids() == ["PG001", "PG002", "PG003", "PG004", "PG005"]
+
+
+def _run_cli(*args, cwd=REPO):
+    return subprocess.run([sys.executable, "-m", "tools.pgcheck", *args],
+                          cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_exit_codes_and_baseline_flow(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(_suppressible(), encoding="utf-8")
+    res = _run_cli(str(bad))
+    assert res.returncode == 1 and "PG001" in res.stdout
+    # --write-baseline grandfathers it; --baseline then passes
+    baseline = tmp_path / "baseline.json"
+    res = _run_cli(str(bad), "--write-baseline", str(baseline))
+    assert res.returncode == 0
+    doc = json.loads(baseline.read_text(encoding="utf-8"))
+    assert doc["version"] == 1 and len(doc["entries"]) == 1
+    res = _run_cli(str(bad), "--baseline", str(baseline))
+    assert res.returncode == 0 and "baselined" in res.stdout
+    # --select skips the only firing pass
+    res = _run_cli(str(bad), "--select", "PG004")
+    assert res.returncode == 0
+    res = _run_cli(str(bad), "--select", "PG999")
+    assert res.returncode == 2
+
+
+# ----------------------------------------------------------------------
+# the repo itself
+# ----------------------------------------------------------------------
+
+def test_stream_and_engine_are_clean():
+    """Tier-1 regression: the serving tier and engine carry zero findings
+    (the checked-in baseline is empty — nothing is grandfathered)."""
+    findings = run_paths([str(REPO / "src" / "repro" / "stream"),
+                          str(REPO / "src" / "repro" / "engine")],
+                         root=str(REPO))
+    assert findings == [], [f.render() for f in findings]
+    assert len(Baseline.load(str(REPO / "pgcheck_baseline.json"))) == 0
+
+
+def test_whole_src_tree_is_clean():
+    """The full `python -m tools.pgcheck src/repro` CI gate, in-process."""
+    findings = run_paths([str(REPO / "src" / "repro")], root=str(REPO))
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_deleting_a_server_lock_fails_the_gate():
+    """Dropping one `with self._lock:` from BatchedQueryServer._pad_add
+    must re-introduce a PG001 finding — the checker guards the real code,
+    not just fixtures."""
+    path = REPO / "src" / "repro" / "stream" / "server.py"
+    src = path.read_text(encoding="utf-8")
+    guarded = ("        with self._lock:\n"
+               "            self._pad[name][0] += real\n"
+               "            self._pad[name][1] += padded\n")
+    unguarded = ("        self._pad[name][0] += real\n"
+                 "        self._pad[name][1] += padded\n")
+    assert guarded in src, "server.py _pad_add changed; update this test"
+    broken = src.replace(guarded, unguarded)
+    findings = check_source("src/repro/stream/server.py", broken)
+    pg001 = [f for f in findings if f.pass_id == "PG001"]
+    assert len(pg001) == 2 and \
+        all(f.scope == "BatchedQueryServer._pad_add" for f in pg001)

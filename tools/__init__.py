@@ -1,0 +1,2 @@
+"""Repo tooling: CI checkers that run before (and without) the dependency
+install — everything in here is stdlib-only."""

@@ -1,0 +1,31 @@
+"""pgcheck: AST-based invariant checker for the repo's load-bearing disciplines.
+
+The serving tier ships aggressive concurrency (snapshot-isolated flushes,
+async workers, donation gating) and aggressive compilation hygiene (pow2
+bucketing, device-resident deltas) — and `docs/ARCHITECTURE.md` documents the
+invariants that make those safe. pgcheck turns the documented disciplines
+into machine-checked ones: five stdlib-``ast`` passes walk the source and
+fail CI on a violation, so a dropped ``with self._lock:`` or an unbucketed
+device buffer is a red lint job, not a debugging session three PRs later.
+
+Passes (see ``docs/STATIC_ANALYSIS.md`` for the full catalog and the
+annotation syntax):
+
+* **PG001 lock-discipline** — fields declared in a per-class ``_GUARDED_BY``
+  map may only be touched under their lock (or in ``*_locked`` methods).
+* **PG002 publish-after-invalidate** — in mutators, the invalidation feed
+  fires before the single serving-view publication (invariant 9).
+* **PG003 recompile guard** — raw ``len()``/``.shape`` sizes must pass
+  through a pow2-bucket helper before reaching a jit/device boundary.
+* **PG004 host-sync-in-span** — ``.item()`` / ``np.asarray`` on unfenced
+  device values inside ``trace.span`` bodies or jitted functions.
+* **PG005 footprint coverage** — every server query kind declares its
+  ``Footprint`` discipline in ``_KIND_FOOTPRINTS`` (invariant 7).
+
+Stdlib-only on purpose: the CI lint job runs ``python -m tools.pgcheck``
+before any dependency install, next to ruff and ``tools/check_links.py``.
+"""
+from .driver import run_paths  # noqa: F401
+from .model import Finding     # noqa: F401
+
+__all__ = ["Finding", "run_paths"]

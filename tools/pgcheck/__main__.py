@@ -1,0 +1,90 @@
+"""CLI for pgcheck: ``python -m tools.pgcheck [paths...] [--baseline F]``.
+
+Exit status is 0 when every finding is grandfathered (or none exist) and 1
+when any *new* finding is reported — which is what the CI lint job keys on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .driver import pass_ids, run_paths
+from .model import Baseline, split_findings
+from .passes import ALL_PASSES
+
+DEFAULT_PATHS = ["src/repro", "tools"]
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    """The argparse CLI surface."""
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.pgcheck",
+        description="AST-based invariant checker for this repo's "
+                    "concurrency, recompile, and footprint disciplines "
+                    "(see docs/STATIC_ANALYSIS.md).")
+    parser.add_argument(
+        "paths", nargs="*", default=None,
+        help=f"files or directories to check (default: {DEFAULT_PATHS})")
+    parser.add_argument(
+        "--baseline", metavar="FILE", default=None,
+        help="baseline JSON; findings whose (pass, path, scope) key is "
+             "listed are reported but do not fail the run")
+    parser.add_argument(
+        "--write-baseline", metavar="FILE", default=None,
+        help="write the current findings to FILE as a fresh baseline and "
+             "exit 0 (use sparingly: the baseline is a ratchet)")
+    parser.add_argument(
+        "--select", metavar="IDS", default=None,
+        help="comma-separated pass ids to run (e.g. PG001,PG004)")
+    parser.add_argument(
+        "--list-passes", action="store_true",
+        help="print the pass catalog and exit")
+    parser.add_argument(
+        "-q", "--quiet", action="store_true",
+        help="suppress the summary line (findings still print)")
+    return parser
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Entry point; returns the process exit status."""
+    args = _build_parser().parse_args(argv)
+
+    if args.list_passes:
+        for mod in ALL_PASSES:
+            print(f"{mod.PASS_ID}  {mod.TITLE}")
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    select = ([p.strip() for p in args.select.split(",") if p.strip()]
+              if args.select else None)
+    if select:
+        unknown = sorted(set(p.upper() for p in select) - set(pass_ids()))
+        if unknown:
+            print(f"pgcheck: unknown pass id(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    findings = run_paths(paths, select=select)
+
+    if args.write_baseline:
+        Baseline.write(args.write_baseline, findings)
+        print(f"pgcheck: wrote {len(findings)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline = Baseline.load(args.baseline) if args.baseline else Baseline()
+    new, grandfathered = split_findings(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if not args.quiet:
+        extra = (f", {len(grandfathered)} baselined"
+                 if grandfathered else "")
+        status = "FAIL" if new else "OK"
+        print(f"pgcheck: {status} — {len(new)} new finding(s){extra}")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,228 @@
+"""Shared AST helpers for the pgcheck passes (stdlib ``ast`` only)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted-name text of a Name/Attribute chain (``"self.dyn.traffic"``),
+    or None when the chain roots in something else (a call, a subscript)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """``field`` when ``node`` is exactly ``self.field``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Dotted text of a call's function (``"np.zeros"``, ``"len"``)."""
+    return attr_chain(node.func)
+
+
+def last_part(dotted: Optional[str]) -> Optional[str]:
+    """Final component of a dotted name (``"np.zeros"`` -> ``"zeros"``)."""
+    return dotted.rsplit(".", 1)[-1] if dotted else None
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    """The string value of a constant-string node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def iter_class_defs(tree: ast.AST) -> Iterator[ast.ClassDef]:
+    """Every class definition in the module (nested ones included)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+def class_methods(cls: ast.ClassDef) -> List[ast.FunctionDef]:
+    """The class's directly defined (sync and async) methods."""
+    return [stmt for stmt in cls.body
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def class_attr_assign(cls: ast.ClassDef, name: str) -> Optional[ast.AST]:
+    """The value node of a class-level ``name = ...`` assignment, if any."""
+    for stmt in cls.body:
+        if isinstance(stmt, ast.Assign):
+            for target in stmt.targets:
+                if isinstance(target, ast.Name) and target.id == name:
+                    return stmt.value
+        elif isinstance(stmt, ast.AnnAssign):
+            if (isinstance(stmt.target, ast.Name) and stmt.target.id == name
+                    and stmt.value is not None):
+                return stmt.value
+    return None
+
+
+def literal_str_dict(node: ast.AST) -> Optional[Dict[str, str]]:
+    """Parse an ``ast.Dict`` of string-constant keys/values, else None."""
+    if not isinstance(node, ast.Dict):
+        return None
+    out: Dict[str, str] = {}
+    for key, value in zip(node.keys, node.values):
+        ks, vs = const_str(key), const_str(value)
+        if ks is None or vs is None:
+            return None
+        out[ks] = vs
+    return out
+
+
+def scope_map(tree: ast.AST) -> Dict[int, str]:
+    """Map ``id(node) -> "Class.method"``-style enclosing scope name.
+
+    Module-level nodes map to ``"<module>"``; nested defs join with dots.
+    Passes use this to stamp findings with a line-drift-stable scope.
+    """
+    out: Dict[int, str] = {}
+
+    def visit(node: ast.AST, scope: str) -> None:
+        """Record ``scope`` for every child, descending into defs."""
+        for child in ast.iter_child_nodes(node):
+            child_scope = scope
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                child_scope = (f"{scope}.{child.name}"
+                               if scope != "<module>" else child.name)
+            out[id(child)] = child_scope
+            visit(child, child_scope)
+
+    out[id(tree)] = "<module>"
+    visit(tree, "<module>")
+    return out
+
+
+def with_self_locks(stmt: ast.With, lock_names: Set[str]) -> Set[str]:
+    """Lock attribute names among a ``with`` statement's ``self.X`` items."""
+    held: Set[str] = set()
+    for item in stmt.items:
+        name = self_attr(item.context_expr)
+        if name is not None and name in lock_names:
+            held.add(name)
+    return held
+
+
+#: method names whose receiver is mutated in place — used to classify
+#: ``self.field.append(...)``-style writes for write-guarded fields
+MUTATOR_METHODS = {
+    "append", "appendleft", "extend", "insert", "pop", "popitem", "popleft",
+    "remove", "clear", "update", "setdefault", "add", "discard", "sort",
+    "reverse", "fill",
+}
+
+
+def written_attr_ids(fn: ast.AST) -> Set[int]:
+    """``id()`` of every Attribute node that is written (not merely read).
+
+    Covers rebinding (``self.x = ...``), deletion, subscript/augmented
+    assignment through the attribute (``self.x[k] += v`` — the Attribute
+    itself carries Load ctx there), loop targets, ``with ... as self.x``,
+    and in-place mutator calls (``self.x.append(v)``).
+    """
+    written: Set[int] = set()
+
+    def attr_roots(target: ast.AST) -> Iterator[ast.Attribute]:
+        """Descend through subscripts/starred/tuples to attribute bases."""
+        if isinstance(target, ast.Attribute):
+            yield target
+        elif isinstance(target, (ast.Subscript, ast.Starred)):
+            yield from attr_roots(target.value)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                yield from attr_roots(elt)
+
+    for node in ast.walk(fn):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            targets = [node.target]
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            targets = [item.optional_vars for item in node.items
+                       if item.optional_vars is not None]
+        elif isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in MUTATOR_METHODS):
+                targets = [node.func.value]
+        for target in targets:
+            for attr in attr_roots(target):
+                written.add(id(attr))
+        # explicit Store/Del ctx attributes are writes wherever they appear
+        if isinstance(node, ast.Attribute) and not isinstance(node.ctx,
+                                                              ast.Load):
+            written.add(id(node))
+    return written
+
+
+def module_jitted_names(tree: ast.AST) -> Set[str]:
+    """Names bound to jitted callables anywhere in the module.
+
+    Recognizes ``f = jax.jit(g)`` / ``f = jit(g)`` assignments and
+    ``@jax.jit`` / ``@jit`` / ``@partial(jax.jit, ...)`` decorations.
+    """
+    jitted: Set[str] = set()
+
+    def is_jit_call(node: ast.AST) -> bool:
+        """True for ``jax.jit(...)`` / ``partial(jax.jit, ...)`` calls."""
+        if not isinstance(node, ast.Call):
+            return False
+        name = call_name(node)
+        if name in ("jax.jit", "jit"):
+            return True
+        # functools.partial(jax.jit, ...) decorator form
+        if last_part(name) == "partial" and node.args:
+            return call_name(node.args[0]) in ("jax.jit", "jit") \
+                if isinstance(node.args[0], ast.Call) \
+                else attr_chain(node.args[0]) in ("jax.jit", "jit")
+        return False
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and is_jit_call(node.value):
+            for target in node.targets:
+                if isinstance(target, ast.Name):
+                    jitted.add(target.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in node.decorator_list:
+                if (attr_chain(deco) in ("jax.jit", "jit")
+                        or is_jit_call(deco)):
+                    jitted.add(node.name)
+    return jitted
+
+
+def jitted_function_defs(tree: ast.AST) -> List[ast.FunctionDef]:
+    """Function definitions decorated with ``jax.jit`` (or partial forms)."""
+    out: List[ast.FunctionDef] = []
+    jitted = module_jitted_names(tree)
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name in jitted):
+            out.append(node)
+    return out
+
+
+def expr_text(node: ast.AST) -> str:
+    """Source-ish text of an expression (``ast.unparse`` convenience)."""
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - malformed synthetic nodes
+        return "<expr>"

@@ -1,0 +1,120 @@
+"""pgcheck driver: file discovery, the per-file pass pipeline, reporting.
+
+``run_paths`` is the single programmatic entry point (the CLI in
+``__main__`` and the tests both call it): discover ``.py`` files, parse each
+once, run every selected pass over the shared tree, drop line-suppressed
+findings, and return the rest sorted by location. Baseline splitting is the
+caller's job (:func:`tools.pgcheck.model.split_findings`) so tests can
+assert on raw findings.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from .model import Finding, is_suppressed, suppressed_lines
+from .passes import ALL_PASSES
+from . import astutil
+
+
+def pass_ids() -> List[str]:
+    """The registered pass ids, in pipeline order."""
+    return [p.PASS_ID for p in ALL_PASSES]
+
+
+class FileContext:
+    """Per-file state handed to every pass's ``check(tree, ctx)``.
+
+    Owns the parsed tree, the ``id(node) -> scope`` map and the path; passes
+    build findings through :meth:`finding` so location/scope stamping lives
+    in one place.
+    """
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.scopes = astutil.scope_map(tree)
+        self.suppressions = suppressed_lines(source)
+
+    def finding(self, pass_id: str, node: ast.AST, message: str,
+                hint: str = "") -> Finding:
+        """Build a :class:`Finding` anchored at ``node``."""
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        scope = self.scopes.get(id(node), "<module>")
+        return Finding(pass_id=pass_id, path=self.path, line=line, col=col,
+                       scope=scope, message=message, hint=hint)
+
+
+def discover_files(paths: Sequence[str]) -> List[Path]:
+    """Expand files/directories into a sorted, de-duplicated ``.py`` list."""
+    seen = {}
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            candidates: Iterable[Path] = sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            candidates = [p]
+        else:
+            continue
+        for c in candidates:
+            if "__pycache__" in c.parts:
+                continue
+            seen[str(c)] = c
+    return [seen[k] for k in sorted(seen)]
+
+
+def _rel_posix(path: Path, root: Optional[Path]) -> str:
+    """Repo-relative posix path when possible (stable baseline keys)."""
+    try:
+        base = root if root is not None else Path.cwd()
+        return path.resolve().relative_to(base.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def check_source(path: str, source: str,
+                 select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the (selected) passes over one in-memory source file.
+
+    Returns findings sorted by location with line suppressions applied.
+    Syntax errors yield a single ``PG000`` finding rather than a crash —
+    pgcheck runs in CI before any other gate, on files ruff may not have
+    seen yet.
+    """
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(pass_id="PG000", path=path,
+                        line=exc.lineno or 1, col=(exc.offset or 1) - 1,
+                        scope="<module>",
+                        message=f"file does not parse: {exc.msg}")]
+    ctx = FileContext(path, source, tree)
+    wanted = {p.upper() for p in select} if select else None
+    findings: List[Finding] = []
+    for pass_mod in ALL_PASSES:
+        if wanted is not None and pass_mod.PASS_ID not in wanted:
+            continue
+        findings.extend(pass_mod.check(tree, ctx))
+    findings = [f for f in findings
+                if not is_suppressed(f, ctx.suppressions)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.pass_id))
+
+
+def run_paths(paths: Sequence[str],
+              select: Optional[Sequence[str]] = None,
+              root: Optional[str] = None) -> List[Finding]:
+    """Check every ``.py`` file under ``paths``; return sorted findings.
+
+    ``root`` (default: cwd) anchors the repo-relative paths findings and
+    baseline entries are keyed on.
+    """
+    root_path = Path(root) if root is not None else None
+    findings: List[Finding] = []
+    for file_path in discover_files(paths):
+        source = file_path.read_text(encoding="utf-8")
+        rel = _rel_posix(file_path, root_path)
+        findings.extend(check_source(rel, source, select=select))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.pass_id))

@@ -1,0 +1,132 @@
+"""Finding / baseline / suppression model shared by every pgcheck pass.
+
+A :class:`Finding` is one violation: pass id, location, the enclosing scope
+(``Class.method`` — what the baseline keys on, so line drift does not churn
+it), a message, and a fix hint. Suppression is per line
+(``# pgcheck: disable=PG001`` trailing comment); the baseline is a checked-in
+JSON file keyed by ``(pass, path, scope)`` that grandfathers pre-existing
+findings without letting new ones in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import List, Optional, Sequence, Set, Tuple
+
+#: trailing-comment suppression: ``# pgcheck: disable=PG001[,PG004]``
+_SUPPRESS_RE = re.compile(r"#\s*pgcheck:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation at a source location.
+
+    Attributes:
+      pass_id: ``"PG001"`` … ``"PG005"`` (or ``"PG000"`` for config errors).
+      path:    repo-relative posix path of the offending file.
+      line:    1-based source line.
+      col:     0-based column.
+      scope:   enclosing ``Class.method`` / ``function`` / ``<module>`` —
+               the stable baseline key component.
+      message: what is wrong, in one sentence.
+      hint:    how to fix it (shown indented under the finding).
+    """
+
+    pass_id: str
+    path: str
+    line: int
+    col: int
+    scope: str
+    message: str
+    hint: str = ""
+
+    @property
+    def baseline_key(self) -> Tuple[str, str, str]:
+        """The line-drift-stable identity: ``(pass, path, scope)``."""
+        return (self.pass_id, self.path, self.scope)
+
+    def render(self) -> str:
+        """``path:line:col: PGnnn message [scope]`` plus an indented hint."""
+        out = f"{self.path}:{self.line}:{self.col}: {self.pass_id} " \
+              f"{self.message} [{self.scope}]"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+def suppressed_lines(source: str) -> dict:
+    """Map line number -> set of pass ids disabled on that line.
+
+    The marker is a trailing comment: ``# pgcheck: disable=PG001`` (several
+    ids comma-separated; ``disable=all`` kills every pass on the line). The
+    scan is purely textual — a marker inside a string literal also counts,
+    which is harmless (strings do not produce findings on their own line).
+    """
+    out: dict = {}
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        match = _SUPPRESS_RE.search(text)
+        if match:
+            ids = {p.strip().upper() for p in match.group(1).split(",")}
+            out[lineno] = ids
+    return out
+
+
+def is_suppressed(finding: Finding, suppressions: dict) -> bool:
+    """Does a line-level ``disable=`` marker cover this finding?"""
+    ids = suppressions.get(finding.line)
+    if not ids:
+        return False
+    return "ALL" in ids or finding.pass_id.upper() in ids
+
+
+class Baseline:
+    """Checked-in set of grandfathered findings (``pgcheck_baseline.json``).
+
+    Entries are ``{"pass", "path", "scope"}`` dicts; a finding whose
+    ``baseline_key`` matches an entry is reported as baselined (not a
+    failure). The file is a *ratchet*: the current repo ships it empty —
+    ``src/repro/stream`` + ``src/repro/engine`` must stay clean — and any
+    future entry needs review to land.
+    """
+
+    def __init__(self, entries: Optional[Sequence[dict]] = None):
+        self._keys: Set[Tuple[str, str, str]] = {
+            (e["pass"], e["path"], e["scope"]) for e in (entries or [])}
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        """Read a baseline JSON file (``{"version": 1, "entries": [...]}``)."""
+        doc = json.loads(Path(path).read_text(encoding="utf-8"))
+        if doc.get("version") != 1:
+            raise ValueError(f"{path}: unsupported baseline version "
+                             f"{doc.get('version')!r}")
+        return cls(doc.get("entries", []))
+
+    @classmethod
+    def write(cls, path: str, findings: Sequence[Finding]) -> None:
+        """Emit the current findings as a fresh baseline file."""
+        entries = sorted({f.baseline_key for f in findings})
+        doc = {"version": 1, "entries": [
+            {"pass": p, "path": fp, "scope": s} for (p, fp, s) in entries]}
+        Path(path).write_text(json.dumps(doc, indent=2) + "\n",
+                              encoding="utf-8")
+
+    def covers(self, finding: Finding) -> bool:
+        """Is this finding grandfathered?"""
+        return finding.baseline_key in self._keys
+
+    def __len__(self) -> int:
+        """Number of grandfathered ``(pass, path, scope)`` keys."""
+        return len(self._keys)
+
+
+def split_findings(findings: Sequence[Finding], baseline: Baseline
+                   ) -> Tuple[List[Finding], List[Finding]]:
+    """Partition findings into ``(new, baselined)`` against a baseline."""
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        (old if baseline.covers(f) else new).append(f)
+    return new, old

@@ -1,0 +1,16 @@
+"""Pass registry: every pgcheck pass module, in id order.
+
+A pass module exposes ``PASS_ID``, ``TITLE`` and
+``check(tree, ctx) -> list[Finding]`` where ``ctx`` is the driver's
+:class:`~tools.pgcheck.driver.FileContext`. Adding a pass = adding a module
+here and a fixture pair under ``tests/lint_fixtures/`` (see
+``docs/STATIC_ANALYSIS.md``).
+"""
+from . import (pg001_locks, pg002_publish, pg003_recompile, pg004_hostsync,
+               pg005_footprint)
+
+#: in-order pass pipeline the driver runs over every file
+ALL_PASSES = (pg001_locks, pg002_publish, pg003_recompile, pg004_hostsync,
+              pg005_footprint)
+
+__all__ = ["ALL_PASSES"]

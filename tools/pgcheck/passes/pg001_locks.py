@@ -1,0 +1,124 @@
+"""PG001 — lock discipline for ``_GUARDED_BY``-annotated fields.
+
+A class opts in by declaring a class-level map from field name to lock
+spec::
+
+    class Server:
+        _GUARDED_BY = {
+            "_queue": "_lock|_cond",     # either lock is acceptable
+            "_serving": "write:_mutate_lock",  # writes only; reads are free
+        }
+
+Spec grammar: ``[write:]lock[|lock...]``. A guarded access is legal when it
+is lexically inside a ``with self.<lock>:`` block for any lock in the spec,
+or inside a method whose name ends in ``_locked`` (callers own the lock), or
+inside ``__init__``/``__del__`` (the object is not shared yet / anymore).
+``write:`` restricts checking to mutations — rebinding, subscript/augmented
+assignment through the field, deletion, and in-place mutator calls
+(``.append``/``.update``/…) — for fields whose unlocked *reads* are part of
+the design (atomic published-reference reads, monotonic counters).
+
+The analysis is lexical and conservative: code inside a nested ``def`` or
+``lambda`` is treated as running without the enclosing ``with`` locks (a
+closure can escape and run later, unlocked).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set, Tuple
+
+from ..astutil import (class_attr_assign, class_methods, iter_class_defs,
+                       literal_str_dict, self_attr, with_self_locks,
+                       written_attr_ids)
+from ..model import Finding
+
+PASS_ID = "PG001"
+TITLE = "lock discipline (_GUARDED_BY)"
+
+#: methods exempt from checking: construction/destruction are single-owner
+EXEMPT_METHODS = {"__init__", "__del__", "__post_init__"}
+
+
+def _parse_spec(spec: str) -> Tuple[bool, Set[str]]:
+    """``"write:_a|_b"`` -> ``(write_only, {"_a", "_b"})``."""
+    write_only = spec.startswith("write:")
+    if write_only:
+        spec = spec[len("write:"):]
+    locks = {part.strip() for part in spec.split("|") if part.strip()}
+    return write_only, locks
+
+
+def check(tree: ast.Module, ctx) -> List[Finding]:
+    """Run PG001 over one parsed file."""
+    findings: List[Finding] = []
+    for cls in iter_class_defs(tree):
+        guard_node = class_attr_assign(cls, "_GUARDED_BY")
+        if guard_node is None:
+            continue
+        guards_raw = literal_str_dict(guard_node)
+        if guards_raw is None:
+            findings.append(ctx.finding(
+                PASS_ID, guard_node,
+                f"{cls.name}._GUARDED_BY must be a literal "
+                "{'field': 'lockspec'} dict of string constants",
+                hint="use e.g. {'_queue': '_lock'} or "
+                     "{'_serving': 'write:_mutate_lock'}"))
+            continue
+        guards = {field: _parse_spec(spec)
+                  for field, spec in guards_raw.items()}
+        all_locks: Set[str] = set()
+        for _, locks in guards.values():
+            all_locks |= locks
+        for method in class_methods(cls):
+            if (method.name in EXEMPT_METHODS
+                    or method.name.endswith("_locked")):
+                continue
+            written = written_attr_ids(method)
+            _scan(method.body, frozenset(), guards, all_locks, written,
+                  cls.name, method.name, ctx, findings)
+    return findings
+
+
+def _scan(stmts, held, guards, all_locks, written, cls_name, method_name,
+          ctx, findings) -> None:
+    """Walk statements tracking which ``self.*`` locks are held."""
+    for stmt in stmts:
+        _scan_node(stmt, held, guards, all_locks, written, cls_name,
+                   method_name, ctx, findings)
+
+
+def _scan_node(node, held, guards, all_locks, written, cls_name,
+               method_name, ctx, findings) -> None:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        # a nested def/lambda may escape the with block: conservatively
+        # re-scan its body with no locks held
+        body = node.body if isinstance(node.body, list) else [node.body]
+        _scan(body, frozenset(), guards, all_locks, written, cls_name,
+              method_name, ctx, findings)
+        return
+    if isinstance(node, (ast.With, ast.AsyncWith)):
+        newly = with_self_locks(node, all_locks)
+        for item in node.items:       # the lock expressions themselves
+            _scan_node(item.context_expr, held, guards, all_locks, written,
+                       cls_name, method_name, ctx, findings)
+        _scan(node.body, held | newly, guards, all_locks, written, cls_name,
+              method_name, ctx, findings)
+        return
+    attr = self_attr(node)
+    if attr is not None and attr in guards:
+        write_only, locks = guards[attr]
+        is_write = id(node) in written or not isinstance(node.ctx, ast.Load)
+        if (is_write or not write_only) and not (held & locks):
+            verb = "written" if is_write else "read"
+            lock_list = " or ".join(f"`with self.{lk}:`"
+                                    for lk in sorted(locks))
+            findings.append(ctx.finding(
+                PASS_ID, node,
+                f"self.{attr} {verb} outside {lock_list} "
+                f"(_GUARDED_BY in {cls_name})",
+                hint=f"hold the lock around the access, or move it into a "
+                     f"*_locked method whose callers own self."
+                     f"{sorted(locks)[0]}"))
+    for child in ast.iter_child_nodes(node):
+        _scan_node(child, held, guards, all_locks, written, cls_name,
+                   method_name, ctx, findings)

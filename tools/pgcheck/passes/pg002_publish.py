@@ -1,0 +1,103 @@
+"""PG002 — publish-after-invalidate ordering in serving-view mutators.
+
+ARCHITECTURE invariant 9: mutations follow fork–invalidate–publish. The
+invalidation feed (``self._publish_invalid*(…)``) must fire *before* the
+single serving-view publication (a call to ``self._publish_view*()`` or a
+direct store to ``self._serving``), and a mutator may publish at most once —
+a second publication store means some readers can capture a half-mutated
+generation between the two swaps.
+
+Detection is convention-driven, so it applies to any class using the
+repo's naming scheme (``_publish_invalid…`` / ``_publish_view…`` /
+``_serving``), fixtures included:
+
+* **PG002a** more than one publication in one method;
+* **PG002b** a publication at or before the first invalidation call in a
+  method that performs both.
+
+Methods with a publication but *no* invalidation call are legal — e.g.
+``restore()`` re-publishing a checkpoint into a listener-free session, or a
+``_publish_view`` helper owning the single ``self._serving`` store. The
+check is line-ordered, not path-sensitive: a conditional invalidation
+followed by an unconditional publication (the no-op-delta shape) passes,
+which matches the invariant — a no-op publication has nothing to
+invalidate.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from ..astutil import call_name, class_methods, iter_class_defs, self_attr
+from ..model import Finding
+
+PASS_ID = "PG002"
+TITLE = "publish-after-invalidate (serving-view mutators)"
+
+#: naming conventions that mark the three primitives
+INVALIDATE_PREFIX = "self._publish_invalid"
+PUBLISH_PREFIX = "self._publish_view"
+SERVING_ATTR = "_serving"
+
+
+def _collect(method: ast.AST) -> Tuple[List[ast.AST], List[ast.AST]]:
+    """``(publications, invalidations)`` nodes inside one method, in source
+    order (nested defs excluded — a closure publishes on its own clock)."""
+    pubs: List[ast.AST] = []
+    invals: List[ast.AST] = []
+
+    def visit(node: ast.AST) -> None:
+        """Collect publications/invalidations, skipping nested defs."""
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(child, ast.Call):
+                dotted = call_name(child)
+                if dotted:
+                    if dotted.startswith(INVALIDATE_PREFIX):
+                        invals.append(child)
+                    elif dotted.startswith(PUBLISH_PREFIX):
+                        pubs.append(child)
+            if (isinstance(child, ast.Attribute)
+                    and not isinstance(child.ctx, ast.Load)
+                    and self_attr(child) == SERVING_ATTR):
+                pubs.append(child)
+            visit(child)
+
+    visit(method)
+    key = lambda n: (n.lineno, n.col_offset)  # noqa: E731 - tiny sort key
+    return sorted(pubs, key=key), sorted(invals, key=key)
+
+
+def check(tree: ast.Module, ctx) -> List[Finding]:
+    """Run PG002 over one parsed file."""
+    findings: List[Finding] = []
+    for cls in iter_class_defs(tree):
+        for method in class_methods(cls):
+            if method.name in ("__init__", "__post_init__"):
+                continue      # construction publishes the first view freely
+            pubs, invals = _collect(method)
+            if len(pubs) > 1:
+                for extra in pubs[1:]:
+                    findings.append(ctx.finding(
+                        PASS_ID, extra,
+                        f"{cls.name}.{method.name} publishes the serving "
+                        f"view more than once (invariant 9: one atomic "
+                        f"publication per mutation)",
+                        hint="fold the mutation into one fork, fire the "
+                             "invalidation feed, then publish exactly once"))
+            if pubs and invals:
+                first_inval = invals[0].lineno
+                for pub in pubs:
+                    if pub.lineno <= first_inval:
+                        findings.append(ctx.finding(
+                            PASS_ID, pub,
+                            f"{cls.name}.{method.name} publishes the "
+                            f"serving view before firing the invalidation "
+                            f"feed (line {first_inval})",
+                            hint="call self._publish_invalid(...) before "
+                                 "the view swap: once a flush can capture "
+                                 "the new view, every stale cache entry "
+                                 "must already be gone"))
+    return findings

@@ -1,0 +1,153 @@
+"""PG003 — recompile guard: raw sizes must be pow2-bucketed at jit edges.
+
+ARCHITECTURE invariant 5: any varying-size device work pads to
+``engine.plan.pow2_bucket`` shapes, so XLA compiles a bounded program set
+under arbitrary traffic. The bug class this catches (shipped twice, fixed in
+PR 5 and PR 9): a buffer sized directly by ``len(requests)`` / ``arr.shape[0]``
+is handed to a jitted entry point, and every distinct traffic size compiles
+a fresh program.
+
+Per-function (intraprocedural, two-pass taint over local assignments):
+
+1. a name is *size-tainted* when assigned from an expression containing
+   ``len(…)``, ``….shape[…]``/``….shape``, ``….size`` or another tainted
+   name — unless the value passes through a recognized bucket helper
+   (``pow2_bucket``, ``frontier_cap_for``), which cleanses the subtree;
+2. a name is a *raw-sized buffer* when assigned from an array constructor
+   (``np/jnp`` ``zeros``/``full``/``empty``/``ones``/``arange``) whose size
+   argument is tainted;
+3. a finding fires when a raw-sized buffer (or a tainted-size constructor
+   expression directly) is passed to a **device boundary**: ``jnp.asarray``,
+   a ``…traffic.put``/``…meter.put`` upload, a name bound via ``jax.jit``,
+   or one of the engine's batch entry methods (``map_edges``/``fold_edges``/
+   ``local_cluster``/``membership``/``similarity``).
+
+Honest limits: flows through helper functions, containers, or attributes are
+not tracked — the pass enforces the *local* discipline "bucket at the point
+you build the padded buffer", which is how every compliant call site in the
+repo is written.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..astutil import call_name, last_part, module_jitted_names
+from ..model import Finding
+
+PASS_ID = "PG003"
+TITLE = "recompile guard (pow2 bucketing at jit edges)"
+
+#: calls that cleanse a size expression (its subtree is bucket-disciplined)
+BUCKET_HELPERS = {"pow2_bucket", "frontier_cap_for"}
+
+#: array constructors whose first argument is a shape/size
+ARRAY_CTORS = {"zeros", "full", "empty", "ones", "arange"}
+ARRAY_CTOR_ROOTS = {"np", "numpy", "jnp"}
+
+#: engine batch entry methods — their array args feed jitted programs
+ENGINE_ENTRY_METHODS = {"map_edges", "fold_edges", "local_cluster",
+                        "membership", "similarity"}
+
+
+def _is_raw_size(node: ast.AST, tainted: Set[str]) -> bool:
+    """Does the expression carry a raw (unbucketed) size?"""
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if last_part(name) in BUCKET_HELPERS:
+            return False            # cleansed subtree: do not descend
+        if name == "len":
+            return True
+        return any(_is_raw_size(arg, tainted) for arg in node.args)
+    if isinstance(node, ast.Attribute):
+        if node.attr in ("shape", "size"):
+            return True
+        return _is_raw_size(node.value, tainted)
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Subscript):
+        return (_is_raw_size(node.value, tainted)
+                or _is_raw_size(node.slice, tainted))
+    if isinstance(node, ast.BinOp):
+        return (_is_raw_size(node.left, tainted)
+                or _is_raw_size(node.right, tainted))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_is_raw_size(elt, tainted) for elt in node.elts)
+    if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+        return _is_raw_size(node.elt, tainted)
+    if isinstance(node, ast.IfExp):
+        return (_is_raw_size(node.body, tainted)
+                or _is_raw_size(node.orelse, tainted))
+    return False
+
+
+def _is_raw_sized_ctor(node: ast.AST, tainted: Set[str]) -> bool:
+    """Is this an array-constructor call with a tainted size argument?"""
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    if last_part(name) not in ARRAY_CTORS:
+        return False
+    root = (name or "").split(".", 1)[0]
+    if root not in ARRAY_CTOR_ROOTS:
+        return False
+    return bool(node.args) and _is_raw_size(node.args[0], tainted)
+
+
+def _boundary_kind(node: ast.Call, jitted: Set[str]) -> str:
+    """Non-empty description when the call crosses into device/jit land."""
+    name = call_name(node)
+    if name in ("jnp.asarray", "jax.numpy.asarray"):
+        return name
+    tail = last_part(name)
+    if tail == "put" and name and any(
+            part in ("traffic", "meter") for part in name.split(".")):
+        return name
+    if tail in ENGINE_ENTRY_METHODS and name and "." in name:
+        return name
+    if isinstance(node.func, ast.Name) and node.func.id in jitted:
+        return f"{node.func.id} (jax.jit)"
+    return ""
+
+
+def check(tree: ast.Module, ctx) -> List[Finding]:
+    """Run PG003 over one parsed file."""
+    findings: List[Finding] = []
+    jitted = module_jitted_names(tree)
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        tainted: Set[str] = set()
+        raw_buffers: Set[str] = set()
+        for _ in range(2):        # two passes: forward refs in loops settle
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    continue
+                target = node.targets[0].id
+                if _is_raw_sized_ctor(node.value, tainted):
+                    raw_buffers.add(target)
+                elif _is_raw_size(node.value, tainted):
+                    tainted.add(target)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            boundary = _boundary_kind(node, jitted)
+            if not boundary:
+                continue
+            for arg in node.args:
+                bad = ((isinstance(arg, ast.Name) and arg.id in raw_buffers)
+                       or _is_raw_sized_ctor(arg, tainted))
+                if bad:
+                    what = (arg.id if isinstance(arg, ast.Name)
+                            else "a buffer")
+                    findings.append(ctx.finding(
+                        PASS_ID, arg,
+                        f"{what} is sized by a raw len()/.shape/.size value "
+                        f"and flows into {boundary} — every distinct "
+                        f"traffic size compiles a fresh XLA program",
+                        hint="pad the size through engine.plan.pow2_bucket "
+                             "(or frontier_cap_for) before building the "
+                             "device buffer"))
+    return findings

@@ -1,0 +1,149 @@
+"""PG004 — host synchronization points inside spans and jitted code.
+
+``.item()``, ``float(x)`` and ``np.asarray(x)`` on a device value block the
+host on the device stream. Inside a ``with trace.span(...)`` body that is a
+*silent* serialization point: the span charges the wait to whatever happens
+to synchronize first, and the fix — ``sp.fence(value)``, which blocks at
+span exit *before* the clock read — exists precisely so device work is
+attributed to the span that launched it. Inside a jitted function the same
+calls are simply bugs (a tracer cannot be materialized).
+
+Flagged, lexically inside a ``with trace.span(…)``/``with span(…)`` block:
+
+* any ``….item()`` call;
+* ``np.asarray(x)`` / ``np.array(x)`` / ``jax.device_get(x)`` where ``x``
+  is a name or attribute that was **not** fenced (passed to ``….fence(…)``,
+  possibly inside a tuple) earlier in the same function;
+* ``float(x)`` / ``int(x)`` where ``x`` is a local name assigned from a
+  ``jnp.*`` call (device-valued by construction).
+
+Inside a ``jax.jit``-decorated function, ``.item()``/``np.asarray``/
+``np.array`` are flagged unconditionally.
+
+The check is per-function and lexical: a sync in a helper called from a
+span body is not seen (the helper should carry its own span), and fencing
+is matched by expression text (``sp.fence(cards)`` allows
+``np.asarray(cards)``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..astutil import call_name, expr_text, jitted_function_defs, last_part
+from ..model import Finding
+
+PASS_ID = "PG004"
+TITLE = "host sync inside trace.span / jitted code"
+
+#: call names that copy a device value to host
+HOST_COPY_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                   "jax.device_get"}
+
+
+def _is_span_call(node: ast.AST) -> bool:
+    """Is this expression a ``trace.span(…)`` / ``span(…)`` call?"""
+    if not isinstance(node, ast.Call):
+        return False
+    return last_part(call_name(node)) == "span"
+
+
+def _fenced_exprs(fn: ast.AST) -> Set[str]:
+    """Expression texts passed to any ``….fence(…)`` call in the function
+    (tuples unpacked: ``sp.fence((a, b))`` fences ``a`` and ``b``)."""
+    fenced: Set[str] = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "fence"):
+            for arg in node.args:
+                elts = arg.elts if isinstance(arg, (ast.Tuple, ast.List)) \
+                    else [arg]
+                for elt in elts:
+                    fenced.add(expr_text(elt))
+    return fenced
+
+
+def _device_names(fn: ast.AST) -> Set[str]:
+    """Local names assigned from ``jnp.*`` calls — device-valued."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            name = call_name(node.value) or ""
+            if name.split(".", 1)[0] in ("jnp", "jax"):
+                names.add(node.targets[0].id)
+    return names
+
+
+def _check_sync_calls(body, fenced, device_names, in_span, ctx, findings,
+                      jitted: bool) -> None:
+    """Flag sync calls in ``body``; recurse, tracking span nesting."""
+    for stmt in body:
+        _scan(stmt, fenced, device_names, in_span, ctx, findings, jitted)
+
+
+def _scan(node, fenced, device_names, in_span, ctx, findings,
+          jitted: bool) -> None:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        return                     # nested defs are their own scan units
+    if isinstance(node, (ast.With, ast.AsyncWith)):
+        entered = in_span or any(_is_span_call(item.context_expr)
+                                 for item in node.items)
+        _check_sync_calls(node.body, fenced, device_names, entered, ctx,
+                          findings, jitted)
+        return
+    if isinstance(node, ast.Call) and (in_span or jitted):
+        where = ("a jitted function" if jitted
+                 else "a trace.span body")
+        name = call_name(node)
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"):
+            findings.append(ctx.finding(
+                PASS_ID, node,
+                f".item() inside {where} — a silent host-device "
+                f"serialization point",
+                hint="fence the device value on the span "
+                     "(sp.fence(value)) and read it after the span, or "
+                     "keep the reduction on device"))
+        elif name in HOST_COPY_CALLS and node.args:
+            arg = node.args[0]
+            if isinstance(arg, (ast.Name, ast.Attribute)) \
+                    and expr_text(arg) not in fenced:
+                findings.append(ctx.finding(
+                    PASS_ID, node,
+                    f"{name}({expr_text(arg)}) inside {where} without a "
+                    f"fence — the host blocks on the device stream and "
+                    f"the wait is charged to whichever span syncs first",
+                    hint="sp.fence(value) before the copy (span exit then "
+                         "blocks before the clock read), or move the copy "
+                         "out of the span"))
+        elif (not jitted and isinstance(node.func, ast.Name)
+              and node.func.id in ("float", "int") and node.args
+              and isinstance(node.args[0], ast.Name)
+              and node.args[0].id in device_names
+              and expr_text(node.args[0]) not in fenced):
+            findings.append(ctx.finding(
+                PASS_ID, node,
+                f"{node.func.id}({node.args[0].id}) inside {where} on a "
+                f"jnp-computed value — a silent host-device "
+                f"serialization point",
+                hint="fence the value on the span or convert after the "
+                     "span exits"))
+    for child in ast.iter_child_nodes(node):
+        _scan(child, fenced, device_names, in_span, ctx, findings, jitted)
+
+
+def check(tree: ast.Module, ctx) -> List[Finding]:
+    """Run PG004 over one parsed file."""
+    findings: List[Finding] = []
+    jitted_defs = {id(fn) for fn in jitted_function_defs(tree)}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        fenced = _fenced_exprs(fn)
+        device_names = _device_names(fn)
+        _check_sync_calls(fn.body, fenced, device_names, False, ctx,
+                          findings, jitted=id(fn) in jitted_defs)
+    return findings

@@ -1,0 +1,176 @@
+"""PG005 — footprint coverage for every server query kind.
+
+ARCHITECTURE invariant 7: every cached answer's ``Footprint`` must cover
+every vertex it read; a query kind served without one silently poisons the
+result cache (its entries survive deltas that changed their inputs). The
+enforced discipline: a serving class (any class with ``submit_*`` methods
+that call ``self._submit("<kind>", …)``) must declare a class-level map
+
+::
+
+    _KIND_FOOTPRINTS = {
+        "similarity": "exact",     # flush constructs Footprint.of(...)
+        "tc": "whole_graph",       # flush marks Footprint.whole_graph()
+    }
+
+and the flush code must back the declaration:
+
+* every kind submitted anywhere in the class must be a key of the map
+  (**the ratchet**: adding ``submit_newthing`` without deciding its
+  footprint is a finding, not a latent cache-poisoning bug);
+* every declared kind must be submitted by some ``submit_*`` method (stale
+  declarations rot);
+* a ``"whole_graph"`` kind needs a ``Footprint.whole_graph()`` call inside
+  an ``if``/``elif`` branch testing that kind's literal;
+* an ``"exact"`` kind needs its literal to appear in some method that also
+  constructs ``Footprint.of(...)`` (branch-level matching is not attempted
+  for grouped batch paths — the declaration plus method-level
+  co-occurrence is the enforced contract).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..astutil import (call_name, class_attr_assign, class_methods,
+                       const_str, iter_class_defs, literal_str_dict)
+from ..model import Finding
+
+PASS_ID = "PG005"
+TITLE = "footprint coverage (_KIND_FOOTPRINTS)"
+
+VALID_DISCIPLINES = {"exact", "whole_graph"}
+
+
+def _submitted_kinds(cls: ast.ClassDef) -> Dict[str, ast.AST]:
+    """``kind -> submit-call node`` for every ``self._submit("kind", …)``."""
+    kinds: Dict[str, ast.AST] = {}
+    for method in class_methods(cls):
+        if not method.name.startswith("submit_"):
+            continue
+        for node in ast.walk(method):
+            if (isinstance(node, ast.Call)
+                    and call_name(node) == "self._submit" and node.args):
+                kind = const_str(node.args[0])
+                if kind is not None:
+                    kinds.setdefault(kind, node)
+    return kinds
+
+
+def _literals_in(node: ast.AST) -> Set[str]:
+    """Every string constant in a subtree."""
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        value = const_str(sub)
+        if value is not None:
+            out.add(value)
+    return out
+
+
+def _footprint_calls(node: ast.AST) -> Set[str]:
+    """``{"of", "whole_graph"}`` members called on ``Footprint`` within."""
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub) or ""
+            if name.endswith("Footprint.of") or name == "Footprint.of":
+                out.add("of")
+            elif name.endswith("Footprint.whole_graph"):
+                out.add("whole_graph")
+    return out
+
+
+def _kind_branch_has(cls: ast.ClassDef, kind: str, member: str) -> bool:
+    """Is there an if/elif testing ``kind``'s literal whose body constructs
+    ``Footprint.<member>``?"""
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.If):
+            continue
+        if kind not in _literals_in(node.test):
+            continue
+        body = ast.Module(body=node.body, type_ignores=[])
+        if member in _footprint_calls(body):
+            return True
+    return False
+
+
+def _method_cooccurrence(cls: ast.ClassDef, kind: str, member: str) -> bool:
+    """Does some method mention the kind literal and call
+    ``Footprint.<member>``?"""
+    for method in class_methods(cls):
+        if kind in _literals_in(method) \
+                and member in _footprint_calls(method):
+            return True
+    return False
+
+
+def check(tree: ast.Module, ctx) -> List[Finding]:
+    """Run PG005 over one parsed file."""
+    findings: List[Finding] = []
+    for cls in iter_class_defs(tree):
+        submitted = _submitted_kinds(cls)
+        if not submitted:
+            continue
+        map_node = class_attr_assign(cls, "_KIND_FOOTPRINTS")
+        if map_node is None:
+            findings.append(ctx.finding(
+                PASS_ID, cls,
+                f"{cls.name} submits query kinds "
+                f"({', '.join(sorted(submitted))}) but declares no "
+                f"_KIND_FOOTPRINTS map",
+                hint="declare _KIND_FOOTPRINTS = {'<kind>': 'exact' | "
+                     "'whole_graph', ...} — every query kind needs a "
+                     "footprint or a whole-graph marker (invariant 7)"))
+            continue
+        declared = literal_str_dict(map_node)
+        if declared is None:
+            findings.append(ctx.finding(
+                PASS_ID, map_node,
+                f"{cls.name}._KIND_FOOTPRINTS must be a literal dict of "
+                f"string constants",
+                hint="use {'similarity': 'exact', 'tc': 'whole_graph', ...}"))
+            continue
+        for kind, discipline in declared.items():
+            if discipline not in VALID_DISCIPLINES:
+                findings.append(ctx.finding(
+                    PASS_ID, map_node,
+                    f"kind {kind!r} declares unknown footprint discipline "
+                    f"{discipline!r}",
+                    hint="valid disciplines: 'exact', 'whole_graph'"))
+        for kind, node in sorted(submitted.items()):
+            if kind not in declared:
+                findings.append(ctx.finding(
+                    PASS_ID, node,
+                    f"query kind {kind!r} is submitted but missing from "
+                    f"{cls.name}._KIND_FOOTPRINTS — its answers would "
+                    f"enter the cache without a footprint contract",
+                    hint="add it to _KIND_FOOTPRINTS and construct its "
+                         "Footprint (or whole-graph marker) in the flush "
+                         "path"))
+                continue
+            discipline = declared[kind]
+            if discipline == "whole_graph":
+                if not _kind_branch_has(cls, kind, "whole_graph"):
+                    findings.append(ctx.finding(
+                        PASS_ID, node,
+                        f"kind {kind!r} is declared whole_graph but no "
+                        f"flush branch testing it calls "
+                        f"Footprint.whole_graph()",
+                        hint="mark the answer in its kind branch: "
+                             "fp = Footprint.whole_graph()"))
+            elif discipline == "exact":
+                if not _method_cooccurrence(cls, kind, "of"):
+                    findings.append(ctx.finding(
+                        PASS_ID, node,
+                        f"kind {kind!r} is declared exact but no method "
+                        f"mentioning it constructs Footprint.of(...)",
+                        hint="build the answer's footprint where the kind "
+                             "is served: fp = Footprint.of(<vertex sets>)"))
+        stale = sorted(set(declared) - set(submitted))
+        for kind in stale:
+            findings.append(ctx.finding(
+                PASS_ID, map_node,
+                f"_KIND_FOOTPRINTS declares kind {kind!r} that no "
+                f"submit_* method submits",
+                hint="drop the stale declaration or add the submit path"))
+    return findings
